@@ -1,0 +1,83 @@
+"""TPU-adaptation microbench: HBM-traffic model + interpret-mode checks.
+
+No TPU in this container, so the kernel "benchmark" is the structural one
+the roofline uses: analytic HBM bytes of bitmap_spmm vs its dense
+equivalent across sparsities (the MAPM analogue), plus wall-clock of the
+XLA reference paths (the lowered CPU path) for regression tracking.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.kernels.bitmap_spmm import hbm_traffic_model
+from repro.sparse import pack_bitmap, pack_block_sparse
+
+
+def _time(fn, *args, iters=5):
+    fn(*args).block_until_ready()
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.time() - t0) / iters * 1e6  # us
+
+
+def run(verbose: bool = True):
+    rng = np.random.default_rng(0)
+    m = k = n = 512
+    rows = []
+    for sparsity in (0.5, 0.75, 0.9):
+        w = rng.standard_normal((k, n)).astype(np.float32)
+        w *= rng.random((k, n)) >= sparsity
+        bw = pack_bitmap(w, block=(128, 128))
+        x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+        t = hbm_traffic_model((m, k), bw)
+        us = _time(lambda xx: ref.bitmap_spmm_ref(xx, bw), x)
+        rows.append({
+            "kernel": "bitmap_spmm", "sparsity": sparsity,
+            "weight_compression": t["weight_compression"],
+            "hbm_reduction": 1 - t["sparse_bytes"] / t["dense_bytes"],
+            "xla_ref_us": us,
+        })
+        if verbose:
+            r = rows[-1]
+            print(f"  bitmap_spmm s={sparsity:.2f} "
+                  f"weight_compression={r['weight_compression']:.2f}x "
+                  f"hbm_total_reduction={r['hbm_reduction']:.1%} "
+                  f"ref={us:.0f}us", flush=True)
+
+    # block-sparse: compute skipped entirely for zero blocks
+    for p_zero in (0.5, 0.75):
+        w = rng.standard_normal((k, n)).astype(np.float32)
+        mask = rng.random((k // 128, n // 128)) >= p_zero
+        w = (w.reshape(k // 128, 128, n // 128, 128)
+             * mask[:, None, :, None]).reshape(k, n)
+        bw = pack_block_sparse(w, block=(128, 128))
+        x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+        us = _time(lambda xx: ref.block_sparse_matmul_ref(xx, bw), x)
+        rows.append({
+            "kernel": "block_sparse", "sparsity": p_zero,
+            "block_density": bw.density,
+            "flop_reduction": 1 - bw.density,
+            "xla_ref_us": us,
+        })
+        if verbose:
+            r = rows[-1]
+            print(f"  block_sparse p0={p_zero:.2f} "
+                  f"density={r['block_density']:.2f} "
+                  f"flop_reduction={r['flop_reduction']:.1%} "
+                  f"ref={us:.0f}us", flush=True)
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

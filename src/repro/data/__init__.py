@@ -1,0 +1,4 @@
+"""Deterministic sharded synthetic data pipeline."""
+from repro.data.pipeline import DataConfig, Prefetcher, synth_batch
+
+__all__ = ["DataConfig", "Prefetcher", "synth_batch"]

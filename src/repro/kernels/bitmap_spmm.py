@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: dense × bitmap-compressed-sparse matmul (EIM on TPU).
+
+TPU adaptation of the paper's EIM + SIDR (DESIGN.md §2):
+
+* weights travel HBM→VMEM in the paper's bitmap format (packed bits + packed
+  non-zero values + per-row start offsets) — HBM traffic falls by ≈ the
+  density ratio, the analogue of the 86 % SRAM-access cut;
+* inside VMEM each tile is decompressed with the EIM re-sort
+  (``row_start[i] + rank_within_row`` = IMId/masked-bitmap logic of §II-C)
+  and fed dense to the MXU;
+* the activation tile is fetched once per (i, k) and *reused across the
+  whole output-column grid dimension* (its BlockSpec index map ignores j) —
+  the SIDR row-broadcast; the compressed weight tile is likewise reused
+  across the output-row dimension — the SIDR column-broadcast;
+* output-stationary f32 accumulator in VMEM across the K grid axis.
+
+Grid: (M/BM, N/BN, K/BK), K innermost (sequential accumulation).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.sparse.format import BitmapWeight
+
+
+def _decompress_tile(bits_packed, values, row_start, bk: int, bn: int,
+                     budget: int, dtype):
+    """EIM re-sort inside VMEM: packed tile -> dense (BK, BN)."""
+    shifts = jax.lax.broadcasted_iota(jnp.uint8, (1, 1, 8), 2)
+    bits = (bits_packed[:, :, None] >> shifts) & jnp.uint8(1)
+    bits = bits.reshape(bk, bn).astype(jnp.int32)
+    rank = jnp.cumsum(bits, axis=1) - 1              # rank within tile row
+    slot = jnp.clip(row_start[:, None] + rank, 0, budget - 1)
+    vals = jnp.take(values, slot.reshape(-1), axis=0).reshape(bk, bn)
+    return jnp.where(bits != 0, vals, jnp.zeros((), dtype)).astype(dtype)
+
+
+def _kernel(x_ref, bits_ref, vals_ref, rows_ref, o_ref, acc_ref, *,
+            bk: int, bn: int, budget: int, n_k: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w_tile = _decompress_tile(bits_ref[0, 0], vals_ref[0, 0], rows_ref[0, 0],
+                              bk, bn, budget, x_ref.dtype)
+    acc_ref[...] += jnp.dot(x_ref[...], w_tile,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "interpret", "out_dtype"))
+def bitmap_spmm(x: jax.Array, w: BitmapWeight, *, bm: int = 128,
+                interpret: bool = True, out_dtype=None) -> jax.Array:
+    """Compute ``x @ W`` with W stored bitmap-compressed.
+
+    x: (M, K); W logical shape (K, N).  Returns (M, N).
+    """
+    m, k = x.shape
+    kk, n = w.shape
+    assert k == kk, (x.shape, w.shape)
+    bk, bn = w.block
+    kt, nt = k // bk, n // bn
+    assert m % bm == 0, (m, bm)
+    out_dtype = out_dtype or x.dtype
+    budget = w.budget
+
+    grid = (m // bm, nt, kt)
+    kernel = functools.partial(_kernel, bk=bk, bn=bn, budget=budget, n_k=kt)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kq: (i, kq)),
+            pl.BlockSpec((1, 1, bk, bn // 8), lambda i, j, kq: (kq, j, 0, 0)),
+            pl.BlockSpec((1, 1, budget), lambda i, j, kq: (kq, j, 0)),
+            pl.BlockSpec((1, 1, bk), lambda i, j, kq: (kq, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kq: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="bitmap_spmm",
+    )(x, w.packed_bits, w.values, w.row_start)
+
+
+def hbm_traffic_model(x_shape: Tuple[int, int], w: BitmapWeight,
+                      bm: int = 128, itemsize: int = 2) -> dict:
+    """Analytic HBM bytes of one bitmap_spmm call vs its dense equivalent.
+
+    Activations are re-fetched once per output-column block (grid reuse
+    pattern above); weights once per output-row block; outputs written once.
+    Used by the roofline adjustment in benchmarks/roofline.py.
+    """
+    m, k = x_shape
+    _, n = w.shape
+    nt = n // w.block[1]
+    mt = m // bm
+    x_bytes = m * k * itemsize * nt
+    out_bytes = m * n * itemsize
+    w_sparse = w.hbm_bytes * mt
+    w_dense = w.dense_bytes * mt
+    return {
+        "sparse_bytes": x_bytes + out_bytes + w_sparse,
+        "dense_bytes": x_bytes + out_bytes + w_dense,
+        "weight_compression": w.compression,
+    }

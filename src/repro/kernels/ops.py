@@ -1,0 +1,52 @@
+"""Jitted public entry points for the kernel layer.
+
+Dispatch policy: on TPU the Pallas kernels run compiled; everywhere else
+(this CPU container, and the 512-device dry-run which lowers through XLA)
+the mathematically-identical reference path is used, keeping ``.lower()``
+valid on any backend.  ``impl="pallas_interpret"`` forces the Pallas kernel
+body through the interpreter — that is how the kernels are validated here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.bitmap_spmm import bitmap_spmm as _bitmap_spmm_pallas
+from repro.kernels.block_sparse import (
+    block_sparse_matmul as _block_sparse_pallas)
+from repro.kernels.flash_attention import (
+    flash_attention as _flash_attention_pallas)
+from repro.sparse.format import BitmapWeight, BlockSparseWeight
+
+
+def default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def bitmap_spmm(x: jax.Array, w: BitmapWeight, impl: str | None = None,
+                **kw) -> jax.Array:
+    impl = impl or default_impl()
+    if impl == "xla":
+        return _ref.bitmap_spmm_ref(x, w)
+    return _bitmap_spmm_pallas(x, w, interpret=(impl == "pallas_interpret"),
+                               **kw)
+
+
+def block_sparse_matmul(x: jax.Array, w: BlockSparseWeight,
+                        impl: str | None = None, **kw) -> jax.Array:
+    impl = impl or default_impl()
+    if impl == "xla":
+        return _ref.block_sparse_matmul_ref(x, w)
+    return _block_sparse_pallas(x, w, interpret=(impl == "pallas_interpret"),
+                                **kw)
+
+
+def flash_attention(q, k, v, impl: str | None = None, *, causal=True,
+                    window=None, **kw) -> jax.Array:
+    impl = impl or default_impl()
+    if impl == "xla":
+        return _ref.attention_ref(q, k, v, causal=causal, window=window)
+    return _flash_attention_pallas(
+        q, k, v, causal=causal, window=window,
+        interpret=(impl == "pallas_interpret"), **kw)

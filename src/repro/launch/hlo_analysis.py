@@ -1,0 +1,85 @@
+"""Compiled-HLO analysis: collective traffic + roofline terms.
+
+``collective_bytes`` parses the post-SPMD optimized HLO text and sums the
+result-shape bytes of every collective op (per-device view).  Wire-traffic
+factors (ring algorithms, large-group limit): all-reduce counts 2×, the
+rest 1×.  ``roofline`` turns (flops, hbm bytes, collective bytes) into the
+three per-device time terms for TPU v5e-class hardware.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+# hardware constants (per chip) — TPU v5e class, from the assignment
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link (~ per-direction usable)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^=]*?\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+_WIRE_FACTOR = {
+    "all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+    "all-to-all": 1.0, "collective-permute": 1.0,
+}
+
+
+def shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-op-kind result-byte totals + wire-adjusted sum."""
+    out: Dict[str, float] = {k: 0.0 for k in _WIRE_FACTOR}
+    counts: Dict[str, int] = {k: 0 for k in _WIRE_FACTOR}
+    for m in _COLL_RE.finditer(hlo_text):
+        shp, kind = m.group(1), m.group(2)
+        # -done ops repeat the -start result; count starts & sync forms only
+        before = hlo_text[max(0, m.start() - 0):m.end()]
+        if "-done(" in before[-60:]:
+            continue
+        out[kind] += shape_bytes(shp)
+        counts[kind] += 1
+    wire = sum(out[k] * _WIRE_FACTOR[k] for k in out)
+    return {**{f"{k}_bytes": v for k, v in out.items()},
+            **{f"{k}_count": c for k, c in counts.items()},
+            "wire_bytes": wire}
+
+
+def roofline(flops: float, hbm_bytes: float, wire_bytes: float,
+             num_links: int = 4) -> Dict[str, float]:
+    """Three per-device roofline time terms (seconds) + the bottleneck."""
+    t_compute = flops / PEAK_FLOPS
+    t_memory = hbm_bytes / HBM_BW
+    t_collective = wire_bytes / (ICI_BW * num_links)
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_collective}
+    bound = max(terms, key=terms.get)
+    t_max = terms[bound]
+    t_sum = t_compute + t_memory + t_collective
+    return {
+        **terms,
+        "bottleneck": bound.replace("_s", ""),
+        # fraction of the ideal overlapped step this term would allow
+        "roofline_fraction_overlap": t_max / t_sum if t_sum else 0.0,
+        "step_time_overlapped_s": t_max,
+    }

@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — required because the dry-run must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before jax init,
+while smoke tests and benches must see one device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_elastic_mesh(model_parallel: int = 16):
+    """Build the largest (data, model) mesh the *live* device set allows.
+
+    Elastic-restart path: after losing a host, the job re-derives the DP
+    extent from the surviving device count and restores the checkpoint onto
+    the smaller mesh (checkpoint.restore reshards).
+    """
+    n = len(jax.devices())
+    mp = min(model_parallel, n)
+    while n % mp:
+        mp -= 1
+    return jax.make_mesh((n // mp, mp), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes the global batch shards over."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def mesh_tag(mesh) -> str:
+    return "x".join(str(s) for s in mesh.devices.shape)

@@ -1,0 +1,61 @@
+"""ShapeDtypeStruct stand-ins for every model input (allocation-free).
+
+``input_specs(cfg, shape)`` returns the exact aval pytree the corresponding
+step function is lowered with — weak-type-correct, shardable, no device
+allocation.  Modality frontends are stubs per the assignment: [audio] gets
+precomputed frame embeddings, [vlm] gets patch embeddings prepended.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeCfg
+from repro.models.config import ModelConfig
+from repro.models.model import cache_structs
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeCfg) -> Dict:
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.compute_dtype)
+    i32 = jnp.int32
+    if cfg.frontend == "frames":
+        return {
+            "embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), dt),
+            "targets": jax.ShapeDtypeStruct((b, s), i32),
+        }
+    if cfg.frontend == "patches":
+        fl = cfg.frontend_len
+        return {
+            "embeds": jax.ShapeDtypeStruct((b, fl, cfg.d_model), dt),
+            "tokens": jax.ShapeDtypeStruct((b, s - fl), i32),
+            "targets": jax.ShapeDtypeStruct((b, s), i32),
+        }
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, s), i32),
+        "targets": jax.ShapeDtypeStruct((b, s), i32),
+    }
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeCfg) -> Dict:
+    """(cache, tokens/embeds, pos) avals for one decode step with a
+    seq_len-deep cache."""
+    b = shape.global_batch
+    dt = jnp.dtype(cfg.compute_dtype)
+    out = {
+        "cache": cache_structs(cfg, b, shape.seq_len),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if cfg.frontend == "frames":
+        out["embeds"] = jax.ShapeDtypeStruct((b, 1, cfg.d_model), dt)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCfg) -> Dict:
+    if shape.kind in ("train", "prefill"):
+        return train_batch_specs(cfg, shape)
+    return decode_input_specs(cfg, shape)

@@ -1,0 +1,110 @@
+"""Step-function builders: train, prefill, serve (decode).
+
+These close over the static ModelConfig so the jitted callables take only
+array pytrees — the exact functions the dry-run lowers and the drivers run.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import (decode_step, forward, lm_head_weight,
+                                lm_loss, loss_fn)
+from repro.train import optimizer as opt_lib
+
+
+def build_train_step(cfg: ModelConfig, opt_cfg: opt_lib.OptConfig,
+                     prune_masks: Optional[Dict] = None,
+                     accum_steps: int = 1) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``prune_masks`` (same tree as params, 0/1) keeps pruned weights at zero
+    through training — the paper's sparse-model regime as a first-class
+    training feature (masked-gradient sparse training).
+
+    ``accum_steps`` > 1 splits the batch into microbatches scanned
+    sequentially with gradient accumulation — the activation working set
+    (the dominant train-cell memory term, §Perf) shrinks ~linearly while
+    the DP gradient all-reduce still happens once per step.  Token-mean
+    loss with equal microbatch sizes makes this *numerically identical* to
+    the single-pass step (tests/test_accum.py).
+    """
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch, cfg)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + tuple(x.shape[1:])), batch)
+
+            def mb(carry, mbatch):
+                gsum, lsum, csum = carry
+                (_, m), g = grads_of(params, mbatch)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + m["loss"] * m["tokens"],
+                        csum + m["tokens"]), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum, csum), _ = jax.lax.scan(
+                mb, (zeros, jnp.float32(0), jnp.float32(0)), micro)
+            # microbatches carry equal token counts -> mean of means is
+            # exact; grads averaged the same way
+            grads = jax.tree.map(lambda g: g / accum_steps, gsum)
+            loss = lsum / jnp.maximum(csum, 1)
+            metrics = {"loss": loss, "tokens": csum}
+        if prune_masks is not None:
+            grads = jax.tree.map(lambda g, m: g * m, grads, prune_masks)
+        new_params, new_opt, opt_metrics = opt_lib.update(
+            params, grads, opt_state, opt_cfg)
+        if prune_masks is not None:
+            new_params = jax.tree.map(lambda p, m: p * m, new_params,
+                                      prune_masks)
+        return new_params, new_opt, {**metrics, **opt_metrics}
+
+    return train_step
+
+
+def build_eval_step(cfg: ModelConfig) -> Callable:
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, batch, cfg)
+        return metrics
+    return eval_step
+
+
+def build_prefill_step(cfg: ModelConfig) -> Callable:
+    """Forward over the full prompt; returns last-position logits.
+
+    (KV export is intentionally omitted from the dry-run cell — see
+    DESIGN.md; the prefill cell measures the forward compute.)
+    """
+
+    def prefill_step(params, batch):
+        hidden = forward(params, cfg, tokens=batch.get("tokens"),
+                         embeds=batch.get("embeds"))
+        w = lm_head_weight(params, cfg).astype(hidden.dtype)
+        logits = (hidden[:, -1] @ w).astype(jnp.float32)
+        return logits
+
+    return prefill_step
+
+
+def build_serve_step(cfg: ModelConfig) -> Callable:
+    """One decode step + greedy head: (params, cache, tokens/embeds, pos)
+    -> (next_token, logits, new_cache)."""
+
+    def serve_step(params, cache, tokens, pos, embeds=None):
+        logits, new_cache = decode_step(params, cache, cfg, tokens, pos,
+                                        embeds=embeds)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, new_cache
+
+    return serve_step

@@ -1,0 +1,11 @@
+"""Unified decoder model stack covering all assigned architectures."""
+from repro.models.config import BlockCfg, ModelConfig, SparsityCfg
+from repro.models.model import (cache_structs, decode_step, forward,
+                                init_cache, init_params, lm_loss, loss_fn,
+                                param_shapes, param_structs)
+
+__all__ = [
+    "BlockCfg", "ModelConfig", "SparsityCfg", "cache_structs", "decode_step",
+    "forward", "init_cache", "init_params", "lm_loss", "loss_fn",
+    "param_shapes", "param_structs",
+]

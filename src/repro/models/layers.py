@@ -1,0 +1,323 @@
+"""Neural building blocks (pure functions over param dicts).
+
+Everything is written against the shapes in ``model.param_shapes`` and kept
+jit/pjit-friendly: no data-dependent shapes, scan-based attention for long
+sequences, sort-based MoE dispatch with static capacity.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+# ---------------------------------------------------------------- norms ----
+
+
+def norm(x: jax.Array, scale: Optional[jax.Array], kind: str) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + 1e-6)
+        if scale is not None:
+            y = y * (1.0 + scale.astype(jnp.float32))
+    elif kind == "ln_nonparam":          # olmo: non-parametric LayerNorm
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+    elif kind == "ln":
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+        if scale is not None:
+            y = y * (1.0 + scale.astype(jnp.float32))
+    else:
+        raise ValueError(kind)
+    return y.astype(x.dtype)
+
+
+def group_norm_heads(x: jax.Array, scale: jax.Array, heads: int) -> jax.Array:
+    """Per-head group norm (RWKV output norm). x: (..., H*Dh)."""
+    shp = x.shape
+    xf = x.reshape(*shp[:-1], heads, shp[-1] // heads).astype(jnp.float32)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.var(xf, -1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+    return (y.reshape(shp) * scale.astype(jnp.float32)).astype(x.dtype)
+
+# ----------------------------------------------------------------- rope ----
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D) with D even; positions: (B, S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def activation(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(kind)
+
+# ------------------------------------------------------------ attention ----
+
+
+def _online_block(carry, kc, vc, q, q_pos, k_pos, window, scale):
+    """One online-softmax step over a KV chunk. q:(B,H,Sq,D) kc:(B,H,C,D)."""
+    m_prev, l_prev, acc = carry
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, kc,
+                   preferred_element_type=jnp.float32) * scale
+    mask = q_pos[:, None, :, None] >= k_pos[:, None, None, :]
+    if window is not None:
+        mask &= (q_pos[:, None, :, None] - k_pos[:, None, None, :]) < window
+    s = jnp.where(mask, s, -1e30)
+    m_cur = jnp.max(s, -1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + p.sum(-1, keepdims=True)
+    acc_new = alpha * acc + jnp.einsum(
+        "bhqk,bhkd->bhqd", p, vc.astype(jnp.float32))
+    return (m_new, l_new, acc_new)
+
+
+def scan_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                   positions: jax.Array, *, window: Optional[int] = None,
+                   q_chunk: int = 2048, kv_chunk: int = 512) -> jax.Array:
+    """Causal flash-style attention in pure XLA (O(S) memory).
+
+    q: (B, S, Hq, D); k/v: (B, S, Hkv, D); positions: (B, S).
+    Python loop over query chunks; each chunk scans only the causally
+    reachable KV prefix (FLOP-optimal), giving O(n_q) scan bodies in HLO.
+    """
+    from repro.models.perf_flags import baseline_mode
+    if baseline_mode():  # §Perf H4 "before": materialise repeated KV
+        g0 = q.shape[2] // k.shape[2]
+        k = jnp.repeat(k, g0, axis=2)
+        v = jnp.repeat(v, g0, axis=2)
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    scale = d ** -0.5
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, s)
+
+    # GQA without materialising repeated KV (§Perf H4): fold the group dim
+    # into the query-sequence dim (s-major) so each KV head serves its G
+    # query heads through the same (B, Hkv, ·) tiles — an 8× KV traffic cut
+    # at kv=8 / 64 heads.
+    qh = (q.reshape(b, s, hkv, g, d).transpose(0, 2, 1, 3, 4)
+          .reshape(b, hkv, s * g, d).astype(jnp.float32))
+    kh = jnp.swapaxes(k, 1, 2).astype(jnp.float32)      # (B, Hkv, S, D)
+    vh = jnp.swapaxes(v, 1, 2).astype(jnp.float32)
+
+    outs = []
+    n_q = -(-s // q_chunk)
+    for iq in range(n_q):
+        q0 = iq * q_chunk
+        q1 = min(q0 + q_chunk, s)
+        qc = qh[:, :, q0 * g:q1 * g]
+        qp = jnp.repeat(positions[:, q0:q1], g, axis=1)  # (B, (q1-q0)*g)
+        kv_hi = q1  # causal reach
+        if window is not None:
+            kv_lo = max(0, (q0 - window + 1) // kv_chunk * kv_chunk)
+        else:
+            kv_lo = 0
+        n_kv = -(-(kv_hi - kv_lo) // kv_chunk)
+        kv_len = n_kv * kv_chunk
+        kc = jax.lax.dynamic_slice_in_dim(
+            kh, kv_lo, min(kv_len, s - kv_lo), axis=2)
+        vc = jax.lax.dynamic_slice_in_dim(
+            vh, kv_lo, min(kv_len, s - kv_lo), axis=2)
+        if kc.shape[2] < kv_len:  # pad tail chunk
+            pad = kv_len - kc.shape[2]
+            kc = jnp.pad(kc, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            vc = jnp.pad(vc, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kcs = kc.reshape(b, hkv, n_kv, kv_chunk, d).transpose(2, 0, 1, 3, 4)
+        vcs = vc.reshape(b, hkv, n_kv, kv_chunk, d).transpose(2, 0, 1, 3, 4)
+        kp = (kv_lo + jnp.arange(kv_len)).reshape(n_kv, kv_chunk)
+        kp = jnp.broadcast_to(kp[:, None, :], (n_kv, b, kv_chunk))
+        qn = (q1 - q0) * g
+        init = (jnp.full((b, hkv, qn, 1), -1e30, jnp.float32),
+                jnp.zeros((b, hkv, qn, 1), jnp.float32),
+                jnp.zeros((b, hkv, qn, d), jnp.float32))
+
+        def step(carry, xs):
+            kcb, vcb, kpb = xs
+            return _online_block(carry, kcb, vcb, qc, qp, kpb, window,
+                                 scale), None
+
+        (m, l, acc), _ = jax.lax.scan(step, init, (kcs, vcs, kp))
+        outs.append(acc / jnp.maximum(l, 1e-30))
+    out = jnp.concatenate(outs, axis=2)                  # (B, Hkv, S*g, D)
+    out = (out.reshape(b, hkv, s, g, d).transpose(0, 2, 1, 3, 4)
+           .reshape(b, s, hq, d))
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, *, window: Optional[int] = None,
+                     ring: bool = False) -> jax.Array:
+    """Single-token attention against a cache.
+
+    q: (B, 1, Hq, D); caches: (B, C, Hkv, D); pos: scalar current position.
+    ``ring`` marks a sliding-window ring buffer of size C == window.
+    """
+    from repro.models.perf_flags import baseline_mode
+    if baseline_mode():  # §Perf H4 "before"
+        g0 = q.shape[2] // k_cache.shape[2]
+        k_cache = jnp.repeat(k_cache, g0, axis=2)
+        v_cache = jnp.repeat(v_cache, g0, axis=2)
+    b, c, hkv, d = k_cache.shape
+    hq = q.shape[2]
+    g = hq // hkv
+    scale = d ** -0.5
+    # grouped-query einsum — never materialise repeated KV (§Perf H4);
+    # KV stays in cache dtype with f32 MXU accumulation (§Perf iter 3):
+    # upcasting the KV shard to f32 per layer doubles decode HBM traffic.
+    qh = q[:, 0].reshape(b, hkv, g, d).astype(k_cache.dtype)
+    s = jnp.einsum("bkgd,bckd->bkgc", qh, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    s = s.reshape(b, hq, c)
+    slots = jnp.arange(c)
+    if ring:
+        # slot i holds the latest position p <= pos with p % C == i;
+        # cold slots imply p < 0 and must be masked out
+        base = pos - (pos % c)
+        slot_pos = jnp.where(slots <= (pos % c), base + slots,
+                             base - c + slots)
+    else:
+        slot_pos = slots
+    valid = (slot_pos <= pos) & (slot_pos >= 0)
+    if window is not None:
+        valid &= (pos - slot_pos) < window
+    s = jnp.where(valid[None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).reshape(b, hkv, g, c)
+    out = jnp.einsum("bkgc,bckd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, hq, d).astype(q.dtype)
+
+# ----------------------------------------------------------------- MoE -----
+
+
+def _moe_ffn_global(params: dict, x: jax.Array, cfg: ModelConfig
+                    ) -> jax.Array:
+    """§Perf H3 "before": global flat-token dispatch (argsort across the
+    whole batch) — forces GSPMD to all-gather the token buffer."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    t = b * s
+    cap = int(t * k * cfg.capacity_factor / e) + 1
+    xt = x.reshape(t, d)
+    logits = jnp.einsum("td,de->te", xt, params["router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    gate, expert_idx = jax.lax.top_k(probs, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    flat_expert = expert_idx.reshape(-1)
+    order = jnp.argsort(flat_expert, stable=True)
+    sorted_expert = flat_expert[order]
+    same = jnp.cumsum(jax.nn.one_hot(sorted_expert, e, dtype=jnp.int32), 0)
+    rank = same[jnp.arange(t * k), sorted_expert] - 1
+    keep = rank < cap
+    slot = sorted_expert * cap + jnp.where(keep, rank, 0)
+    src_token = order // k
+    buf = jnp.zeros((e * cap, d), x.dtype)
+    buf = buf.at[slot].add(jnp.where(keep[:, None], xt[src_token], 0))
+    buf = buf.reshape(e, cap, d)
+    wg = params["w_gate"].astype(x.dtype)
+    wu = params["w_up"].astype(x.dtype)
+    wd = params["w_down"].astype(x.dtype)
+    h = activation(jnp.einsum("ecd,edf->ecf", buf, wg), cfg.act)
+    h = h * jnp.einsum("ecd,edf->ecf", buf, wu)
+    y = jnp.einsum("ecf,efd->ecd", h, wd).reshape(e * cap, d)
+    gath = jnp.where(keep[:, None], y[slot], 0)
+    gval = gate.reshape(-1)[order]
+    out = jnp.zeros((t, d), jnp.float32)
+    out = out.at[src_token].add(gath.astype(jnp.float32) * gval[:, None])
+    return out.reshape(b, s, d).astype(x.dtype)
+
+
+def moe_ffn(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Sort-based top-k MoE with static capacity. x: (B, S, D) -> (B, S, D).
+
+    Dispatch is *per batch row* (§Perf H3): the sort, ranking and bucket
+    scatter are all vectorised over B with no cross-row dataflow, so with B
+    sharded over the data axes GSPMD keeps dispatch entirely local — a
+    global flat-token argsort forces all-gathers of the whole token buffer.
+    Capacity is per-row: C = ceil(S·k·cf / E); overflow tokens are dropped
+    (standard capacity dispatch).  Expert weights shard on the FFN dim
+    ("model"), so the expert einsums are local too.
+    """
+    from repro.models import shard_utils
+    from repro.models.perf_flags import baseline_mode
+    if baseline_mode():
+        return _moe_ffn_global(params, x, cfg)
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    cap = int(s * k * cfg.capacity_factor / e) + 1
+
+    logits = jnp.einsum("bsd,de->bse", x, params["router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    gate, expert_idx = jax.lax.top_k(probs, k)           # (B, S, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = expert_idx.reshape(b, s * k)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)    # (B, S*k)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    # rank within expert group = position − first occurrence (sorted rows);
+    # §Perf iter 4: the one-hot/cumsum rank cost (B, S·k, E) int traffic
+    # (~900 GB/step for moonshot); searchsorted is O(S·k·log)
+    first = jax.vmap(lambda row: jnp.searchsorted(row, row, side="left")
+                     )(sorted_e)
+    rank = jnp.arange(s * k)[None, :] - first
+    keep = rank < cap
+    slot = sorted_e * cap + jnp.where(keep, rank, 0)     # (B, S*k)
+    src = order // k                                      # token id per row
+
+    rows = jnp.arange(b)[:, None]
+    gathered = jnp.take_along_axis(x, src[..., None], axis=1)  # (B,S*k,D)
+    buf = jnp.zeros((b, e * cap, d), x.dtype)
+    buf = buf.at[rows, slot].add(
+        jnp.where(keep[..., None], gathered, 0))
+    buf = shard_utils.hint(buf.reshape(b, e, cap, d), "batch")
+
+    wg = params["w_gate"].astype(x.dtype)
+    wu = params["w_up"].astype(x.dtype)
+    wd = params["w_down"].astype(x.dtype)
+    h = activation(jnp.einsum("becd,edf->becf", buf, wg), cfg.act)
+    h = h * jnp.einsum("becd,edf->becf", buf, wu)
+    # §Perf iter 4: gather h across the F shards so the w_down contraction
+    # and the whole combine run locally on D shards (no capacity-buffer AR)
+    h = shard_utils.hint(h, "batch", None, None, None)
+    y = jnp.einsum("becf,efd->becd", h, wd).reshape(b, e * cap, d)
+    y = shard_utils.hint(y, "batch", None, "model")
+
+    out_tok = jnp.take_along_axis(y, slot[..., None], axis=1)  # (B,S*k,D)
+    gval = jnp.take_along_axis(gate.reshape(b, s * k), order, axis=-1)
+    contrib = jnp.where(keep[..., None], out_tok, 0).astype(jnp.float32)
+    out = jnp.zeros((b, s, d), jnp.float32)
+    out = out.at[rows, src].add(contrib * gval[..., None])
+    return out.astype(x.dtype)
+
+
+def mlp(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    w_dtype = x.dtype
+    if "w_gate" in params:
+        h = activation(x @ params["w_gate"].astype(w_dtype), cfg.act)
+        h = h * (x @ params["w_up"].astype(w_dtype))
+    else:
+        h = activation(x @ params["w_up"].astype(w_dtype), cfg.act)
+    return h @ params["w_down"].astype(w_dtype)

@@ -1,0 +1,444 @@
+"""Unified decoder LM: shapes, init, forward, decode, loss.
+
+One model covers all ten assigned architectures through ``ModelConfig``:
+the layer stack is ``lax.scan`` over ``num_periods`` repetitions of the
+(possibly heterogeneous) block pattern, with ``jax.checkpoint`` on the
+period body — O(1) HLO in depth and one residual per layer of activation
+memory.  Parameters are stored stacked over periods: leading dim P on every
+block leaf.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import shard_utils
+from repro.models import ssm
+from repro.models.config import BlockCfg, ModelConfig
+
+RWKV_MIX_RANK = 32
+RWKV_DECAY_RANK = 64
+
+# ------------------------------------------------------------- shapes ------
+
+
+def _block_shapes(cfg: ModelConfig, blk: BlockCfg) -> Dict[str, tuple]:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    f = cfg.d_ff
+    shp: Dict[str, tuple] = {}
+    if blk.mixer == "attn":
+        shp["attn"] = {
+            "norm": (d,), "wq": (d, h * hd), "wk": (d, kv * hd),
+            "wv": (d, kv * hd), "wo": (h * hd, d),
+        }
+        if cfg.qk_norm:
+            shp["attn"]["q_norm"] = (hd,)
+            shp["attn"]["k_norm"] = (hd,)
+    elif blk.mixer == "mamba":
+        di, n, dtr = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_dt_rank
+        shp["mamba"] = {
+            "norm": (d,), "in_proj": (d, 2 * di),
+            "conv_w": (di, cfg.mamba_conv), "conv_b": (di,),
+            "x_proj": (di, dtr + 2 * n), "dt_proj": (dtr, di),
+            "dt_bias": (di,), "A_log": (di, n), "D": (di,),
+            "out_proj": (di, d),
+        }
+    elif blk.mixer == "rwkv":
+        hh = cfg.rwkv_heads
+        shp["rwkv"] = {
+            "norm": (d,), "mix_mu": (5, d),
+            "mix_A": (d, 5 * RWKV_MIX_RANK),
+            "mix_B": (5, RWKV_MIX_RANK, d),
+            "w0": (d,), "decay_A": (d, RWKV_DECAY_RANK),
+            "decay_B": (RWKV_DECAY_RANK, d),
+            "w_r": (d, d), "w_k": (d, d), "w_v": (d, d), "w_g": (d, d),
+            "w_o": (d, d), "u": (hh, cfg.rwkv_head_dim), "gn_scale": (d,),
+        }
+    else:
+        raise ValueError(blk.mixer)
+
+    if blk.ffn == "mlp":
+        shp["mlp"] = {"norm": (d,), "w_up": (d, f), "w_down": (f, d)}
+        if cfg.act == "silu":
+            shp["mlp"]["w_gate"] = (d, f)
+    elif blk.ffn == "moe":
+        e = cfg.num_experts
+        shp["moe"] = {
+            "norm": (d,), "router": (d, e), "w_gate": (e, d, f),
+            "w_up": (e, d, f), "w_down": (e, f, d),
+        }
+    elif blk.ffn == "rwkv_cm":
+        shp["rwkv_cm"] = {"norm": (d,), "cm_mu": (2, d), "cm_k": (d, f),
+                          "cm_v": (f, d), "cm_r": (d, d)}
+    elif blk.ffn == "none":
+        pass
+    else:
+        raise ValueError(blk.ffn)
+    return shp
+
+
+def param_shapes(cfg: ModelConfig) -> Dict:
+    """Nested dict of shape tuples (block leaves stacked over periods)."""
+    p = cfg.num_periods
+    blocks = {}
+    for i, blk in enumerate(cfg.pattern):
+        blocks[f"b{i}"] = jax.tree.map(
+            lambda s: (p,) + s, _block_shapes(cfg, blk),
+            is_leaf=lambda x: isinstance(x, tuple))
+    shapes = {
+        "embed": (cfg.vocab_size, cfg.d_model),
+        "final_norm": (cfg.d_model,),
+        "blocks": blocks,
+    }
+    if not cfg.tie_embeddings:
+        shapes["lm_head"] = (cfg.d_model, cfg.vocab_size)
+    return shapes
+
+
+def param_structs(cfg: ModelConfig) -> Dict:
+    """ShapeDtypeStruct pytree for allocation-free lowering (dry-run)."""
+    dt = jnp.dtype(cfg.param_dtype)
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s, dt),
+                        param_shapes(cfg),
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def init_params(rng: jax.Array, cfg: ModelConfig) -> Dict:
+    shapes = param_shapes(cfg)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        shapes, is_leaf=lambda x: isinstance(x, tuple))
+    keys = jax.random.split(rng, len(flat))
+    dt = jnp.dtype(cfg.param_dtype)
+    depth_scale = 1.0 / math.sqrt(2 * cfg.num_layers)
+
+    leaves = []
+    for (path, shape), key in zip(flat, keys):
+        name = jax.tree_util.keystr(path).lower()
+        if "a_log" in name:
+            n = shape[-1]
+            leaf = jnp.broadcast_to(
+                jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32)), shape)
+        elif "dt_bias" in name:
+            leaf = jnp.full(shape, math.log(math.expm1(0.01)))
+        elif "mix_mu" in name or name.endswith("['u']"):
+            leaf = jnp.full(shape, 0.5)
+        elif "w0" in name:
+            leaf = jnp.full(shape, -1.0) + 0.5 * jax.random.normal(key, shape)
+        elif "gn_scale" in name or "cm_mu" in name:
+            leaf = jnp.full(shape, 1.0 if "gn" in name else 0.5)
+        elif "norm" in name:
+            leaf = jnp.zeros(shape)
+        elif "conv_b" in name or name.endswith("['d']"):
+            leaf = (jnp.zeros(shape) if "conv" in name
+                    else jnp.ones(shape))
+        elif "embed" in name:
+            leaf = 0.02 * jax.random.normal(key, shape)
+        elif any(k in name for k in ("wo", "out_proj", "w_down", "w_o")):
+            leaf = (0.02 * depth_scale) * jax.random.normal(key, shape)
+        else:
+            leaf = 0.02 * jax.random.normal(key, shape)
+        leaves.append(leaf.astype(dt))
+    return jax.tree.unflatten(treedef, leaves)
+
+# ------------------------------------------------------------ forward ------
+
+
+def _apply_attn(p: Dict, x: jax.Array, cfg: ModelConfig, blk: BlockCfg,
+                positions: jax.Array) -> jax.Array:
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    dt_ = x.dtype
+    xn = L.norm(x, p.get("norm"), cfg.norm)
+    q = (xn @ p["wq"].astype(dt_)).reshape(b, s, h, hd)
+    k = (xn @ p["wk"].astype(dt_)).reshape(b, s, kv, hd)
+    v = (xn @ p["wv"].astype(dt_)).reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = L.norm(q, p["q_norm"], "rmsnorm")
+        k = L.norm(k, p["k_norm"], "rmsnorm")
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    o = L.scan_attention(q, k, v, positions, window=blk.window)
+    return (o.reshape(b, s, h * hd) @ p["wo"].astype(dt_))
+
+
+def _apply_block(bp: Dict, x: jax.Array, blk: BlockCfg, cfg: ModelConfig,
+                 positions: jax.Array) -> jax.Array:
+    if blk.mixer == "attn":
+        x = x + _apply_attn(bp["attn"], x, cfg, blk, positions)
+    elif blk.mixer == "mamba":
+        xn = L.norm(x, bp["mamba"].get("norm"), cfg.norm)
+        x = x + ssm.mamba_mix(bp["mamba"], xn, cfg)
+    elif blk.mixer == "rwkv":
+        xn = L.norm(x, bp["rwkv"].get("norm"), cfg.norm)
+        x = x + ssm.rwkv_mix(bp["rwkv"], xn, cfg)
+
+    if blk.ffn == "mlp":
+        xn = L.norm(x, bp["mlp"].get("norm"), cfg.norm)
+        x = x + L.mlp(bp["mlp"], xn, cfg)
+    elif blk.ffn == "moe":
+        xn = L.norm(x, bp["moe"].get("norm"), cfg.norm)
+        x = x + L.moe_ffn(bp["moe"], xn, cfg)
+    elif blk.ffn == "rwkv_cm":
+        xn = L.norm(x, bp["rwkv_cm"].get("norm"), cfg.norm)
+        x = x + ssm.rwkv_channel_mix(bp["rwkv_cm"], xn, cfg)
+    return x
+
+
+def embed_inputs(params: Dict, cfg: ModelConfig,
+                 tokens: Optional[jax.Array],
+                 embeds: Optional[jax.Array]) -> jax.Array:
+    dt_ = jnp.dtype(cfg.compute_dtype)
+    parts = []
+    if embeds is not None:
+        parts.append(embeds.astype(dt_))
+    if tokens is not None:
+        e = jnp.take(params["embed"], tokens, axis=0).astype(dt_)
+        if getattr(cfg, "embed_scale", False):
+            e = e * math.sqrt(cfg.d_model)
+        parts.append(e)
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+
+
+def forward(params: Dict, cfg: ModelConfig,
+            tokens: Optional[jax.Array] = None,
+            embeds: Optional[jax.Array] = None,
+            positions: Optional[jax.Array] = None) -> jax.Array:
+    """Returns final hidden states (B, S, D) after the final norm."""
+    x = embed_inputs(params, cfg, tokens, embeds)
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def period_fn(x, period_params):
+        for i, blk in enumerate(cfg.pattern):
+            x = _apply_block(period_params[f"b{i}"], x, blk, cfg, positions)
+        return x, None
+
+    body = period_fn
+    if cfg.remat:
+        body = jax.checkpoint(period_fn,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+    else:
+        for per in range(cfg.num_periods):
+            sliced = jax.tree.map(lambda a: a[per], params["blocks"])
+            x, _ = body(x, sliced)
+    return L.norm(x, params.get("final_norm"), cfg.norm)
+
+# --------------------------------------------------------------- loss ------
+
+
+def lm_head_weight(params: Dict, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def lm_loss(params: Dict, hidden: jax.Array, targets: jax.Array,
+            cfg: ModelConfig) -> Tuple[jax.Array, Dict]:
+    """Chunked vocab-parallel cross entropy.
+
+    hidden: (B, S, D); targets: (B, S) int32, -1 = masked.  The LM head +
+    softmax run per sequence chunk so the (B, chunk, V) logits — not the
+    (B, S, V) tensor — bound memory; with V sharded over "model" the
+    normaliser and the target logit are computed with one-hot reductions
+    (Megatron-style vocab-parallel CE).
+    """
+    b, s, d = hidden.shape
+    w = lm_head_weight(params, cfg).astype(hidden.dtype)
+    chunk = min(cfg.loss_chunk, s)
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)), constant_values=-1)
+    hid = hidden.reshape(b, n_chunks, chunk, d).swapaxes(0, 1)
+    tgt = targets.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+
+    from repro.models.perf_flags import baseline_mode
+
+    def chunk_loss_core(h, t):
+        # §Perf H1: keep the chunk logits vocab-sharded over "model" —
+        # without the hint GSPMD replicates full-vocab logits per device.
+        logits = (h @ w).astype(jnp.float32)                # (B, c, V)
+        if not baseline_mode():
+            logits = shard_utils.hint(logits, "batch", None, "model")
+        if cfg.logit_softcap:
+            logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        vio = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        sel = vio == jnp.maximum(t, 0)[:, :, None]
+        tl = jnp.sum(jnp.where(sel, logits, 0.0), axis=-1)
+        mask = (t >= 0).astype(jnp.float32)
+        return jnp.sum((lse - tl) * mask), jnp.sum(mask)
+
+    # §Perf H2: remat the chunk — otherwise the scan saves every chunk's
+    # (B, c, V) logits as backward residuals (e.g. 13 GB/device for olmo).
+    if not baseline_mode():
+        chunk_loss_core = jax.checkpoint(chunk_loss_core)
+
+    def chunk_loss(carry, xs):
+        h, t = xs
+        ls, m = chunk_loss_core(h, t)
+        loss_sum, cnt = carry
+        return (loss_sum + ls, cnt + m), None
+
+    (loss_sum, cnt), _ = jax.lax.scan(
+        chunk_loss, (jnp.float32(0), jnp.float32(0)), (hid, tgt))
+    loss = loss_sum / jnp.maximum(cnt, 1)
+    return loss, {"loss": loss, "tokens": cnt}
+
+
+def loss_fn(params: Dict, batch: Dict, cfg: ModelConfig
+            ) -> Tuple[jax.Array, Dict]:
+    hidden = forward(params, cfg, tokens=batch.get("tokens"),
+                     embeds=batch.get("embeds"))
+    return lm_loss(params, hidden, batch["targets"], cfg)
+
+# ------------------------------------------------------------- decode ------
+
+
+def _cache_shapes(cfg: ModelConfig, blk: BlockCfg, batch: int,
+                  max_len: int) -> Dict[str, tuple]:
+    p = cfg.num_periods
+    hd = cfg.resolved_head_dim
+    if blk.mixer == "attn":
+        c = min(blk.window, max_len) if blk.window else max_len
+        return {"k": (p, batch, c, cfg.num_kv_heads, hd),
+                "v": (p, batch, c, cfg.num_kv_heads, hd)}
+    if blk.mixer == "mamba":
+        return {"h": (p, batch, cfg.mamba_d_inner, cfg.mamba_d_state),
+                "conv": (p, batch, cfg.mamba_conv - 1, cfg.mamba_d_inner)}
+    if blk.mixer == "rwkv":
+        shp = {"s": (p, batch, cfg.rwkv_heads, cfg.rwkv_head_dim,
+                     cfg.rwkv_head_dim),
+               "x_prev": (p, batch, cfg.d_model)}
+        return shp
+    raise ValueError(blk.mixer)
+
+
+def cache_structs(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    """ShapeDtypeStructs of the decode cache (bf16 KV, f32 SSM states)."""
+    out = {}
+    for i, blk in enumerate(cfg.pattern):
+        shp = _cache_shapes(cfg, blk, batch, max_len)
+        entry = {}
+        for k, s in shp.items():
+            dt = jnp.float32 if k in ("h", "s") else jnp.dtype(
+                cfg.compute_dtype)
+            entry[k] = jax.ShapeDtypeStruct(s, dt)
+        if blk.ffn == "rwkv_cm":
+            entry["cm_x_prev"] = jax.ShapeDtypeStruct(
+                (cfg.num_periods, batch, cfg.d_model),
+                jnp.dtype(cfg.compute_dtype))
+        out[f"b{i}"] = entry
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_structs(cfg, batch, max_len))
+
+
+def _decode_attn(p: Dict, x: jax.Array, cache: Dict, cfg: ModelConfig,
+                 blk: BlockCfg, pos: jax.Array) -> Tuple[jax.Array, Dict]:
+    b, _, d = x.shape
+    hd = cfg.resolved_head_dim
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    dt_ = x.dtype
+    xn = L.norm(x, p.get("norm"), cfg.norm)
+    q = (xn @ p["wq"].astype(dt_)).reshape(b, 1, h, hd)
+    k = (xn @ p["wk"].astype(dt_)).reshape(b, 1, kv, hd)
+    v = (xn @ p["wv"].astype(dt_)).reshape(b, 1, kv, hd)
+    if cfg.qk_norm:
+        q = L.norm(q, p["q_norm"], "rmsnorm")
+        k = L.norm(k, p["k_norm"], "rmsnorm")
+    posb = jnp.broadcast_to(pos[None], (b,))[:, None]
+    q = L.rope(q, posb, cfg.rope_theta)
+    k = L.rope(k, posb, cfg.rope_theta)
+    c = cache["k"].shape[1]
+    ring = blk.window is not None and c == blk.window
+    slot = (pos % c) if ring else pos
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+    o = L.decode_attention(q, k_cache, v_cache, pos, window=blk.window,
+                           ring=ring)
+    out = o.reshape(b, 1, h * hd) @ p["wo"].astype(dt_)
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def decode_step(params: Dict, cache: Dict, cfg: ModelConfig,
+                tokens: Optional[jax.Array], pos: jax.Array,
+                embeds: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Dict]:
+    """One decode step. tokens: (B, 1) (or embeds (B, 1, D)); pos: scalar.
+
+    Returns (logits (B, V), new cache).  Scans over periods, carrying the
+    hidden state and threading each period's cache slice through as
+    scan xs/ys.
+    """
+    x = embed_inputs(params, cfg, tokens, embeds)
+    b = x.shape[0]
+
+    def period_fn(x, xs):
+        period_params, period_cache = xs
+        new_cache = {}
+        for i, blk in enumerate(cfg.pattern):
+            bp = period_params[f"b{i}"]
+            pc = period_cache[f"b{i}"]
+            nc = {}
+            if blk.mixer == "attn":
+                o, nc = _decode_attn(bp["attn"], x, pc, cfg, blk, pos)
+                x = x + o
+            elif blk.mixer == "mamba":
+                xn = L.norm(x, bp["mamba"].get("norm"), cfg.norm)
+                o, st = ssm.mamba_decode(bp["mamba"], xn,
+                                         {"h": pc["h"], "conv": pc["conv"]},
+                                         cfg)
+                x = x + o
+                nc = st
+            elif blk.mixer == "rwkv":
+                xn = L.norm(x, bp["rwkv"].get("norm"), cfg.norm)
+                o, st = ssm.rwkv_decode(bp["rwkv"], xn,
+                                        {"s": pc["s"],
+                                         "x_prev": pc["x_prev"]}, cfg)
+                x = x + o
+                nc = st
+            if blk.ffn == "mlp":
+                xn = L.norm(x, bp["mlp"].get("norm"), cfg.norm)
+                x = x + L.mlp(bp["mlp"], xn, cfg)
+            elif blk.ffn == "moe":
+                xn = L.norm(x, bp["moe"].get("norm"), cfg.norm)
+                x = x + L.moe_ffn(bp["moe"], xn, cfg)
+            elif blk.ffn == "rwkv_cm":
+                xn = L.norm(x, bp["rwkv_cm"].get("norm"), cfg.norm)
+                x = x + ssm.rwkv_channel_mix(bp["rwkv_cm"], xn, cfg,
+                                             x_prev=pc["cm_x_prev"][:, None])
+                nc["cm_x_prev"] = xn[:, 0]
+            new_cache[f"b{i}"] = nc
+        return x, new_cache
+
+    x, new_cache = jax.lax.scan(period_fn, x, (params["blocks"], cache))
+    x = L.norm(x, params.get("final_norm"), cfg.norm)
+    w = lm_head_weight(params, cfg).astype(x.dtype)
+    logits = (x[:, 0] @ w).astype(jnp.float32)
+    from repro.models.perf_flags import baseline_mode
+    if not baseline_mode():
+        # §Perf: keep decode logits vocab-sharded — otherwise GSPMD
+        # gathers the whole embedding table per device (~12 GB/step for
+        # gemma3-12b's 262k vocab).
+        logits = shard_utils.hint(logits, "batch", "model")
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits, new_cache

@@ -1,0 +1,14 @@
+"""A/B switch between the naive-baseline lowering and the optimized one.
+
+``REPRO_PERF_MODE=baseline`` reproduces the pre-hillclimb lowering
+(EXPERIMENTS.md §Perf "before" rows) so both variants can be measured with
+the same HLO counters: un-sharded/un-remat'd loss, global-argsort MoE
+dispatch, and repeat-materialised GQA.  Default: optimized.
+"""
+from __future__ import annotations
+
+import os
+
+
+def baseline_mode() -> bool:
+    return os.environ.get("REPRO_PERF_MODE", "").lower() == "baseline"

@@ -1,0 +1,50 @@
+"""Activation-sharding hints that degrade to no-ops off-mesh.
+
+``hint(x, *axes)`` applies ``with_sharding_constraint`` when tracing inside
+a mesh context, silently dropping axes the mesh doesn't have or that don't
+divide the dim — so model code can carry production sharding annotations
+while remaining runnable on a single CPU device (smoke tests, examples).
+
+Axis conventions (launch/sharding.py): "batch" expands to ("pod","data");
+"model" is tensor parallel; None replicates.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _current_mesh():
+    try:
+        env = jax.interpreters.pxla.thread_resources.env
+        mesh = env.physical_mesh
+        if mesh.empty:
+            return None
+        return mesh
+    except Exception:
+        return None
+
+
+def hint(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Constrain dim i of x to axis names axes[i] ("batch"/"model"/None)."""
+    mesh = _current_mesh()
+    if mesh is None:
+        return x
+    spec = []
+    for dim, ax in zip(x.shape, axes):
+        if ax == "batch":
+            names: Tuple[str, ...] = tuple(
+                a for a in ("pod", "data") if a in mesh.axis_names)
+            size = 1
+            for a in names:
+                size *= mesh.shape[a]
+            spec.append(names if names and dim % size == 0 and dim > 1
+                        else None)
+        elif ax is not None and ax in mesh.axis_names:
+            spec.append(ax if dim % mesh.shape[ax] == 0 else None)
+        else:
+            spec.append(None)
+    spec += [None] * (len(x.shape) - len(spec))
+    return jax.lax.with_sharding_constraint(x, P(*spec))

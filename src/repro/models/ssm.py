@@ -1,0 +1,242 @@
+"""State-space mixers: Mamba (selective SSM, jamba) and RWKV6 (Finch).
+
+Both are implemented with a chunked-scan structure: an outer ``lax.scan``
+over time chunks carries the recurrent state (O(L/C) saved residuals under
+remat), and the intra-chunk recurrence runs vectorised (associative scan for
+Mamba's elementwise state; a short sequential scan for RWKV6's matrix
+state).  Single-step ``*_decode`` variants serve the decode shapes — these
+archs are why the 500k-context cells are runnable at all (O(1) state vs a
+KV cache).
+
+The paper's EIM/SIDR applies to the projection GEMMs of both mixers; the
+recurrences themselves are not GEMMs (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import group_norm_heads
+
+# ---------------------------------------------------------------- Mamba ----
+
+
+def _ssm_chunk(a: jax.Array, bx: jax.Array, h0: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+    """h_t = a_t * h_{t-1} + bx_t via associative scan within a chunk.
+
+    a, bx: (B, C, dI, N); h0: (B, dI, N).  Returns (h_all, h_last).
+    """
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    a_cum, b_cum = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    h = a_cum * h0[:, None] + b_cum
+    return h, h[:, -1]
+
+
+def mamba_mix(params: dict, x: jax.Array, cfg: ModelConfig,
+              chunk: int = 256) -> jax.Array:
+    """Selective SSM (Mamba-1) forward. x: (B, S, D) -> (B, S, D)."""
+    b, s, d = x.shape
+    di = cfg.mamba_d_inner
+    n = cfg.mamba_d_state
+    dtr = cfg.mamba_dt_rank
+    dt_ = x.dtype
+
+    xz = x @ params["in_proj"].astype(dt_)               # (B, S, 2*dI)
+    xs, z = jnp.split(xz, 2, axis=-1)
+
+    # depthwise causal conv over time
+    conv_w = params["conv_w"].astype(dt_)                # (dI, K)
+    kk = conv_w.shape[-1]
+    pad = jnp.pad(xs, ((0, 0), (kk - 1, 0), (0, 0)))
+    xs = sum(pad[:, i:i + s] * conv_w[:, i] for i in range(kk))
+    xs = jax.nn.silu(xs + params["conv_b"].astype(dt_))
+
+    # data-dependent (selective) parameters
+    dbc = xs @ params["x_proj"].astype(dt_)              # (B, S, dtr+2N)
+    dt, bmat, cmat = jnp.split(dbc, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(dt @ params["dt_proj"].astype(dt_)
+                         + params["dt_bias"].astype(dt_))  # (B, S, dI)
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))    # (dI, N)
+
+    dt32 = dt.astype(jnp.float32)
+    da = jnp.exp(dt32[..., None] * a)                    # (B, S, dI, N)
+    dbx = (dt32[..., None] * bmat.astype(jnp.float32)[:, :, None, :]
+           * xs.astype(jnp.float32)[..., None])          # (B, S, dI, N)
+
+    n_chunks = -(-s // chunk)
+    pad_t = n_chunks * chunk - s
+    if pad_t:
+        da = jnp.pad(da, ((0, 0), (0, pad_t), (0, 0), (0, 0)),
+                     constant_values=1.0)
+        dbx = jnp.pad(dbx, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+    da = da.reshape(b, n_chunks, chunk, di, n).swapaxes(0, 1)
+    dbx = dbx.reshape(b, n_chunks, chunk, di, n).swapaxes(0, 1)
+
+    def step(h, xs_):
+        a_c, bx_c = xs_
+        h_all, h_last = _ssm_chunk(a_c, bx_c, h)
+        return h_last, h_all
+
+    h0 = jnp.zeros((b, di, n), jnp.float32)
+    _, h_seq = jax.lax.scan(step, h0, (da, dbx))
+    h_seq = h_seq.swapaxes(0, 1).reshape(b, n_chunks * chunk, di, n)[:, :s]
+
+    y = jnp.einsum("bsdn,bsn->bsd", h_seq, cmat.astype(jnp.float32))
+    y = y.astype(dt_) + xs * params["D"].astype(dt_)
+    y = y * jax.nn.silu(z)
+    return y @ params["out_proj"].astype(dt_)
+
+
+def mamba_decode(params: dict, x: jax.Array, state: dict, cfg: ModelConfig
+                 ) -> Tuple[jax.Array, dict]:
+    """One-token Mamba step. x: (B, 1, D); state: {"h": (B,dI,N),
+    "conv": (B, K-1, dI)}."""
+    b, _, d = x.shape
+    n = cfg.mamba_d_state
+    dtr = cfg.mamba_dt_rank
+    dt_ = x.dtype
+
+    xz = x[:, 0] @ params["in_proj"].astype(dt_)
+    xs, z = jnp.split(xz, 2, axis=-1)                    # (B, dI)
+
+    conv_w = params["conv_w"].astype(dt_)                # (dI, K)
+    hist = jnp.concatenate([state["conv"], xs[:, None]], 1)  # (B, K, dI)
+    xs_c = jnp.einsum("bkd,dk->bd", hist, conv_w)
+    xs_c = jax.nn.silu(xs_c + params["conv_b"].astype(dt_))
+    new_conv = hist[:, 1:]
+
+    dbc = xs_c @ params["x_proj"].astype(dt_)
+    dt, bmat, cmat = jnp.split(dbc, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(dt @ params["dt_proj"].astype(dt_)
+                         + params["dt_bias"].astype(dt_))
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    da = jnp.exp(dt.astype(jnp.float32)[..., None] * a)  # (B, dI, N)
+    dbx = (dt.astype(jnp.float32)[..., None]
+           * bmat.astype(jnp.float32)[:, None, :]
+           * xs_c.astype(jnp.float32)[..., None])
+    h = da * state["h"] + dbx
+    y = jnp.einsum("bdn,bn->bd", h, cmat.astype(jnp.float32)).astype(dt_)
+    y = y + xs_c * params["D"].astype(dt_)
+    y = y * jax.nn.silu(z)
+    out = (y @ params["out_proj"].astype(dt_))[:, None]
+    return out, {"h": h, "conv": new_conv}
+
+# ---------------------------------------------------------------- RWKV6 ----
+
+
+def _rwkv_tokens(params: dict, x: jax.Array, x_prev: jax.Array,
+                 cfg: ModelConfig):
+    """Shared r/k/v/w/g preparation. x: (B, S, D); x_prev: (B, S, D) is x
+    shifted right by one token (data-dependent token-shift, Finch)."""
+    dt_ = x.dtype
+    diff = x_prev - x
+    # low-rank data-dependent lerp amounts for r,k,v,w,g
+    lora = jnp.tanh(x @ params["mix_A"].astype(dt_))     # (B,S,5*rank)
+    lora = lora.reshape(*x.shape[:-1], 5, -1)
+    dyn = jnp.einsum("bsfr,frd->bsfd", lora, params["mix_B"].astype(dt_))
+    mix = params["mix_mu"].astype(dt_) + dyn             # (B,S,5,D)
+    xr, xk, xv, xw, xg = [x + diff * mix[..., i, :] for i in range(5)]
+
+    r = xr @ params["w_r"].astype(dt_)
+    k = xk @ params["w_k"].astype(dt_)
+    v = xv @ params["w_v"].astype(dt_)
+    g = jax.nn.silu(xg @ params["w_g"].astype(dt_))
+    # data-dependent decay (the headline Finch feature)
+    ww = params["w0"].astype(jnp.float32) + jnp.tanh(
+        xw @ params["decay_A"].astype(dt_)).astype(jnp.float32) @ \
+        params["decay_B"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(ww))                            # (B,S,D) in (0,1)
+    return r, k, v, w, g
+
+
+def rwkv_mix(params: dict, x: jax.Array, cfg: ModelConfig,
+             chunk: int = 128) -> jax.Array:
+    """RWKV6 time-mix. x: (B, S, D) -> (B, S, D)."""
+    b, s, d = x.shape
+    h = cfg.rwkv_heads
+    hd = cfg.rwkv_head_dim
+    x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    r, k, v, w, g = _rwkv_tokens(params, x, x_prev, cfg)
+
+    def heads(t):
+        return t.reshape(b, s, h, hd).astype(jnp.float32)
+
+    r_, k_, v_, w_ = heads(r), heads(k), heads(v), heads(w)
+    u = params["u"].astype(jnp.float32)                  # (H, hd)
+
+    n_chunks = -(-s // chunk)
+    pad_t = n_chunks * chunk - s
+    if pad_t:
+        r_ = jnp.pad(r_, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+        k_ = jnp.pad(k_, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+        v_ = jnp.pad(v_, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+        w_ = jnp.pad(w_, ((0, 0), (0, pad_t), (0, 0), (0, 0)),
+                     constant_values=1.0)
+    resh = lambda t: t.reshape(b, n_chunks, chunk, h, hd).swapaxes(0, 1)
+    r_, k_, v_, w_ = resh(r_), resh(k_), resh(v_), resh(w_)
+
+    def chunk_step(state, xs_):
+        rc, kc, vc, wc = xs_                             # (B, C, H, hd)
+
+        def tok(st, ts):
+            rt, kt, vt, wt = ts                          # (B, H, hd)
+            kv = kt[..., :, None] * vt[..., None, :]     # (B,H,hd,hd)
+            out = jnp.einsum("bhk,bhkv->bhv", rt,
+                             st + u[None, :, :, None] * kv)
+            st = wt[..., :, None] * st + kv
+            return st, out
+
+        st, outs = jax.lax.scan(
+            tok, state,
+            (rc.swapaxes(0, 1), kc.swapaxes(0, 1), vc.swapaxes(0, 1),
+             wc.swapaxes(0, 1)))
+        return st, outs.swapaxes(0, 1)                   # (B, C, H, hd)
+
+    s0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    _, out = jax.lax.scan(chunk_step, s0, (r_, k_, v_, w_))
+    out = out.swapaxes(0, 1).reshape(b, n_chunks * chunk, h * hd)[:, :s]
+    out = group_norm_heads(out.astype(x.dtype), params["gn_scale"], h)
+    out = out * g
+    return out @ params["w_o"].astype(x.dtype)
+
+
+def rwkv_decode(params: dict, x: jax.Array, state: dict, cfg: ModelConfig
+                ) -> Tuple[jax.Array, dict]:
+    """One-token RWKV6 step. state: {"s": (B,H,hd,hd), "x_prev": (B, D)}."""
+    b, _, d = x.shape
+    h, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    r, k, v, w, g = _rwkv_tokens(params, x, state["x_prev"][:, None], cfg)
+    rt = r[:, 0].reshape(b, h, hd).astype(jnp.float32)
+    kt = k[:, 0].reshape(b, h, hd).astype(jnp.float32)
+    vt = v[:, 0].reshape(b, h, hd).astype(jnp.float32)
+    wt = w[:, 0].reshape(b, h, hd).astype(jnp.float32)
+    u = params["u"].astype(jnp.float32)
+    kv = kt[..., :, None] * vt[..., None, :]
+    out = jnp.einsum("bhk,bhkv->bhv", rt, state["s"] + u[..., None] * kv)
+    new_s = wt[..., :, None] * state["s"] + kv
+    out = out.reshape(b, 1, h * hd).astype(x.dtype)
+    out = group_norm_heads(out, params["gn_scale"], h) * g
+    return out @ params["w_o"].astype(x.dtype), {
+        "s": new_s, "x_prev": x[:, 0]}
+
+
+def rwkv_channel_mix(params: dict, x: jax.Array, cfg: ModelConfig,
+                     x_prev: jax.Array | None = None) -> jax.Array:
+    """RWKV channel-mix FFN (squared-relu). Works for (B,S,D) and decode."""
+    dt_ = x.dtype
+    if x_prev is None:
+        x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    mu = params["cm_mu"].astype(dt_)                     # (2, D)
+    xk = x + (x_prev - x) * mu[0]
+    xr = x + (x_prev - x) * mu[1]
+    k = jnp.square(jax.nn.relu(xk @ params["cm_k"].astype(dt_)))
+    return jax.nn.sigmoid(xr @ params["cm_r"].astype(dt_)) * (
+        k @ params["cm_v"].astype(dt_))

@@ -1,0 +1,187 @@
+"""Framework-level sparse weight containers (TPU adaptation of Fig. 1).
+
+Two storage formats, both jax pytrees so they flow through jit/pjit:
+
+* ``BitmapWeight`` — the paper's bitmap format at VMEM-tile granularity:
+  per (BK×BN) tile a packed bitmap (1 bit/element), packed non-zero values
+  (row-major, padded to a per-tile budget) and per-row start offsets
+  (the host-side half of EIM: the ``row_start + rank`` decompression the
+  kernel performs is exactly the IMId/masked-bitmap re-sort of §II-C).
+  HBM bytes ≈ density·data + 1/8·bitmap ⇒ ~3.2× traffic cut at 75 % sparsity.
+
+* ``BlockSparseWeight`` — coarse-grain: all-zero (BK×BN) blocks are dropped
+  entirely; per output-column-block a compressed list of surviving K-block
+  indices (CSR-of-blocks = EIM at block granularity, consumed by the kernel
+  through scalar prefetch).
+
+Both formats enforce their structure at pack time (top-magnitude within the
+budget), mirroring how the paper prunes to a target sparsity.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class BitmapWeight:
+    """Bitmap-compressed (K, N) weight, tiled (BK, BN)."""
+
+    packed_bits: jax.Array   # (KT, NT, BK, BN // 8) uint8
+    values: jax.Array        # (KT, NT, budget) dtype, row-major packed
+    row_start: jax.Array     # (KT, NT, BK) int32 — first value slot per row
+    shape: Tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+    block: Tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def budget(self) -> int:
+        return self.values.shape[-1]
+
+    @property
+    def hbm_bytes(self) -> int:
+        return (self.packed_bits.size * self.packed_bits.dtype.itemsize
+                + self.values.size * self.values.dtype.itemsize
+                + self.row_start.size * self.row_start.dtype.itemsize)
+
+    @property
+    def dense_bytes(self) -> int:
+        return self.shape[0] * self.shape[1] * self.values.dtype.itemsize
+
+    @property
+    def compression(self) -> float:
+        return self.dense_bytes / self.hbm_bytes
+
+
+def pack_bitmap(w, block: Tuple[int, int] = (128, 128),
+                density_budget: float | None = None) -> BitmapWeight:
+    """Pack a dense (K, N) array (zeros = pruned) into BitmapWeight.
+
+    If a tile holds more non-zeros than ``budget = ceil(BK·BN·density_budget)``
+    the smallest-magnitude surplus is re-pruned (top-k per tile), as recorded
+    in DESIGN.md.  Default budget = measured max tile density.
+    """
+    w = np.asarray(w)
+    k, n = w.shape
+    bk, bn = block
+    assert k % bk == 0 and n % bn == 0, (w.shape, block)
+    assert bn % 8 == 0
+    kt, nt = k // bk, n // bn
+    tiles = w.reshape(kt, bk, nt, bn).transpose(0, 2, 1, 3)  # (KT,NT,BK,BN)
+
+    bits = tiles != 0
+    per_tile = bits.reshape(kt, nt, -1).sum(-1)
+    if density_budget is None:
+        budget = int(per_tile.max())
+    else:
+        budget = math.ceil(bk * bn * density_budget)
+        over = per_tile > budget
+        if over.any():
+            flat = np.abs(tiles.reshape(kt, nt, -1))
+            # keep the `budget` largest magnitudes per overflowing tile
+            kth = np.partition(flat, flat.shape[-1] - budget, axis=-1)[
+                ..., flat.shape[-1] - budget]
+            keep = flat >= kth[..., None]
+            keep &= flat > 0
+            tiles = tiles * keep.reshape(tiles.shape)
+            bits = tiles != 0
+    budget = max(budget, 1)
+
+    flat_bits = bits.reshape(kt, nt, bk, bn)
+    row_nnz = flat_bits.sum(-1)
+    row_start = np.zeros((kt, nt, bk), np.int32)
+    row_start[:, :, 1:] = np.cumsum(row_nnz, -1)[:, :, :-1]
+
+    ranks = np.cumsum(flat_bits, -1) - 1
+    slot = row_start[..., None] + ranks
+    values = np.zeros((kt, nt, budget), w.dtype)
+    i0, i1, i2, i3 = np.nonzero(flat_bits)
+    values[i0, i1, slot[i0, i1, i2, i3]] = tiles[i0, i1, i2, i3]
+
+    packed = np.packbits(flat_bits, axis=-1, bitorder="little")
+    return BitmapWeight(
+        packed_bits=jnp.asarray(packed),
+        values=jnp.asarray(values),
+        row_start=jnp.asarray(row_start),
+        shape=(k, n), block=(bk, bn))
+
+
+def unpack_bitmap(bw: BitmapWeight) -> jax.Array:
+    """Pure-jnp decompression oracle (mirrors the in-kernel EIM re-sort)."""
+    kt, nt, bk, bnb = bw.packed_bits.shape
+    bn = bnb * 8
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    bits = (bw.packed_bits[..., None] >> shifts) & 1        # (KT,NT,BK,BN/8,8)
+    bits = bits.reshape(kt, nt, bk, bn).astype(jnp.int32)
+    rank = jnp.cumsum(bits, -1) - 1
+    idx = jnp.clip(bw.row_start[..., None] + rank, 0, bw.budget - 1)
+    vals = jnp.take_along_axis(
+        bw.values[:, :, None, :], idx.reshape(kt, nt, bk * bn)[:, :, None, :],
+        axis=-1).reshape(kt, nt, bk, bn)
+    dense_tiles = jnp.where(bits != 0, vals, 0)
+    return dense_tiles.transpose(0, 2, 1, 3).reshape(bw.shape)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class BlockSparseWeight:
+    """Block-sparse (K, N) weight: zero (BK×BN) blocks dropped."""
+
+    values: jax.Array     # (NT, SMAX, BK, BN) surviving blocks per col-block
+    kidx: jax.Array       # (NT, SMAX) int32 — source K-block index (pad: 0)
+    nnzb: jax.Array       # (NT,) int32 — number of valid blocks per col-block
+    shape: Tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+    block: Tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def smax(self) -> int:
+        return self.values.shape[1]
+
+    @property
+    def hbm_bytes(self) -> int:
+        return (self.values.size * self.values.dtype.itemsize
+                + self.kidx.size * 4 + self.nnzb.size * 4)
+
+    @property
+    def density(self) -> float:
+        kt = self.shape[0] // self.block[0]
+        return float(np.asarray(self.nnzb).sum()) / (kt * self.kidx.shape[0])
+
+
+def pack_block_sparse(w, block: Tuple[int, int] = (128, 128)
+                      ) -> BlockSparseWeight:
+    w = np.asarray(w)
+    k, n = w.shape
+    bk, bn = block
+    assert k % bk == 0 and n % bn == 0
+    kt, nt = k // bk, n // bn
+    tiles = w.reshape(kt, bk, nt, bn).transpose(2, 0, 1, 3)  # (NT,KT,BK,BN)
+    alive = (tiles != 0).any((-1, -2))                        # (NT, KT)
+    nnzb = alive.sum(-1).astype(np.int32)
+    smax = max(int(nnzb.max()), 1)
+    values = np.zeros((nt, smax, bk, bn), w.dtype)
+    kidx = np.zeros((nt, smax), np.int32)
+    for j in range(nt):
+        ks = np.nonzero(alive[j])[0]
+        values[j, :len(ks)] = tiles[j, ks]
+        kidx[j, :len(ks)] = ks
+    return BlockSparseWeight(
+        values=jnp.asarray(values), kidx=jnp.asarray(kidx),
+        nnzb=jnp.asarray(nnzb), shape=(k, n), block=(bk, bn))
+
+
+def unpack_block_sparse(bw: BlockSparseWeight) -> jax.Array:
+    nt, smax, bk, bn = bw.values.shape
+    kt = bw.shape[0] // bk
+    dense = jnp.zeros((nt, kt, bk, bn), bw.values.dtype)
+    valid = jnp.arange(smax)[None, :] < bw.nnzb[:, None]
+    vals = jnp.where(valid[..., None, None], bw.values, 0)
+    j = jnp.repeat(jnp.arange(nt), smax)
+    dense = dense.at[j, bw.kidx.reshape(-1)].add(
+        vals.reshape(nt * smax, bk, bn))
+    return dense.transpose(1, 2, 0, 3).reshape(bw.shape)

@@ -1,0 +1,96 @@
+"""N:M structured sparsity (e.g. 1:4 = the paper's 75 %) — beyond-paper.
+
+The bitmap format is maximally general but needs a per-row cumsum re-sort
+at decompress time (EIM). N:M sparsity regularises *at pack time* instead:
+every group of M consecutive K-elements keeps exactly N survivors, stored
+as (values, 0..M-1 group offsets). Decompression is M·N selects — no
+cumsum, fully vectorised, MXU-friendly — at a slightly lower compression
+(1:4 ⇒ 2.67× incl. indices vs bitmap's 2.96×). This is the same
+regularity-vs-generality trade the paper makes when it fixes the shared
+register at 8 entries.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class NmWeight:
+    """(K, N) weight with N:M structure along K, tiled (BK, BN)."""
+
+    values: jax.Array    # (KT, NT, BK//M*Nkeep, BN)
+    idx: jax.Array       # (KT, NT, BK//M*Nkeep, BN) int8, offset in group
+    shape: Tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+    block: Tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+    n_keep: int = dataclasses.field(metadata=dict(static=True))
+    m_group: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def hbm_bytes(self) -> int:
+        return (self.values.size * self.values.dtype.itemsize
+                + self.idx.size)
+
+    @property
+    def compression(self) -> float:
+        dense = self.shape[0] * self.shape[1] * self.values.dtype.itemsize
+        return dense / self.hbm_bytes
+
+
+def prune_nm(w, n: int = 1, m: int = 4) -> np.ndarray:
+    """Keep the top-|n| magnitudes in every group of m along axis 0."""
+    w = np.asarray(w)
+    k, cols = w.shape
+    assert k % m == 0
+    groups = w.reshape(k // m, m, cols)
+    order = np.argsort(-np.abs(groups), axis=1)
+    keep = np.zeros_like(groups, dtype=bool)
+    g_idx = np.arange(k // m)[:, None, None]
+    c_idx = np.arange(cols)[None, None, :]
+    keep[g_idx, order[:, :n, :], c_idx] = True
+    return (groups * keep).reshape(k, cols)
+
+
+def pack_nm(w, n: int = 1, m: int = 4,
+            block: Tuple[int, int] = (128, 128)) -> NmWeight:
+    """Pack an N:M-structured (K, N) array (use ``prune_nm`` first)."""
+    w = np.asarray(w)
+    k, cols = w.shape
+    bk, bn = block
+    assert k % bk == 0 and cols % bn == 0 and bk % m == 0
+    kt, nt = k // bk, cols // bn
+
+    groups = w.reshape(k // m, m, cols)
+    absg = np.abs(groups)
+    # positions of the n largest magnitudes, sorted by position for
+    # deterministic layout
+    top = np.sort(np.argsort(-absg, axis=1)[:, :n, :], axis=1)  # (K/m,n,C)
+    vals = np.take_along_axis(groups, top, axis=1)               # (K/m,n,C)
+    vals = vals.reshape(k // m * n, cols)
+    idx = top.reshape(k // m * n, cols).astype(np.int8)
+
+    bkc = bk // m * n
+    values = vals.reshape(kt, bkc, nt, bn).transpose(0, 2, 1, 3)
+    idxs = idx.reshape(kt, bkc, nt, bn).transpose(0, 2, 1, 3)
+    return NmWeight(values=jnp.asarray(values), idx=jnp.asarray(idxs),
+                    shape=(k, cols), block=block, n_keep=n, m_group=m)
+
+
+def unpack_nm(nm: NmWeight) -> jax.Array:
+    """Pure-jnp oracle: NmWeight -> dense (K, N)."""
+    kt, nt, bkc, bn = nm.values.shape
+    n, m = nm.n_keep, nm.m_group
+    g = bkc // n                                   # groups per tile
+    vals = nm.values.reshape(kt, nt, g, n, bn)
+    idx = nm.idx.reshape(kt, nt, g, n, bn).astype(jnp.int32)
+    pos = jnp.arange(m, dtype=jnp.int32)
+    # dense[kt,nt,g,m,bn] = sum_j where(idx_j == p, val_j)
+    sel = (idx[:, :, :, :, None, :] == pos[None, None, None, None, :, None])
+    dense = jnp.sum(jnp.where(sel, vals[:, :, :, :, None, :], 0), axis=3)
+    dense = dense.reshape(kt, nt, g * m, bn)
+    return dense.transpose(0, 2, 1, 3).reshape(nm.shape)

@@ -1,0 +1,4 @@
+"""Training substrate: optimizer, checkpointing, gradient compression."""
+from repro.train.optimizer import OptConfig
+
+__all__ = ["OptConfig"]

@@ -1,0 +1,10 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device forcing here — smoke tests
+and benches must see the real single CPU device; only the dry-run (and the
+subprocess-based SPMD tests) force 512/8 host devices."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

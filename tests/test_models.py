@@ -1,0 +1,230 @@
+"""Model stack: per-arch smoke, decode/forward consistency, layer math."""
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.models import (decode_step, forward, init_cache, init_params,
+                          loss_fn)
+from repro.models.config import BlockCfg, ModelConfig
+from repro.models.layers import moe_ffn, scan_attention
+from repro.models.model import lm_head_weight
+from repro.models import ssm
+from repro.kernels import ref
+
+
+def _smoke_batch(cfg, b, s, rng):
+    batch = {}
+    if cfg.frontend == "frames":
+        batch["embeds"] = jnp.asarray(
+            rng.standard_normal((b, s, cfg.d_model)), jnp.float32)
+        batch["targets"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    elif cfg.frontend == "patches":
+        fl = cfg.frontend_len
+        batch["embeds"] = jnp.asarray(
+            rng.standard_normal((b, fl, cfg.d_model)), jnp.float32)
+        batch["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (b, s - fl)), jnp.int32)
+        t = rng.integers(0, cfg.vocab_size, (b, s))
+        t[:, :fl] = -1
+        batch["targets"] = jnp.asarray(t, jnp.int32)
+    else:
+        batch["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+        batch["targets"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_forward_loss(arch, rng):
+    """Reduced config: one forward + loss on CPU, shape & finiteness."""
+    cfg = get_smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = _smoke_batch(cfg, 2, 16, rng)
+    loss, metrics = jax.jit(lambda p, b: loss_fn(p, b, cfg))(params, batch)
+    assert jnp.isfinite(loss)
+    assert abs(float(loss) - math.log(cfg.vocab_size)) < 2.5
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_train_step(arch, rng):
+    """One full train step (fwd+bwd+AdamW): params move, all finite."""
+    from repro.launch.steps import build_train_step
+    from repro.train import optimizer as opt_lib
+    cfg = get_smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    opt_state = opt_lib.init(params)
+    batch = _smoke_batch(cfg, 2, 16, rng)
+    step = build_train_step(cfg, opt_lib.OptConfig(lr=1e-3, warmup_steps=1,
+                                                   total_steps=10))
+    new_params, new_opt, metrics = jax.jit(step)(params, opt_state, batch)
+    assert jnp.isfinite(metrics["loss"])
+    assert jnp.isfinite(metrics["grad_norm"])
+    moved = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()),
+                         params, new_params)
+    assert max(jax.tree.leaves(moved)) > 0
+    for leaf in jax.tree.leaves(new_params):
+        assert bool(jnp.isfinite(leaf).all())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch, rng):
+    """Token-by-token decode with caches must reproduce the parallel
+    forward logits — validates KV caches, ring buffers and SSM states.
+    f32 compute so bf16 reassociation noise doesn't mask cache bugs."""
+    import dataclasses
+    cfg = dataclasses.replace(get_smoke_config(arch),
+                              compute_dtype="float32")
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    b, t = 2, 12
+    if cfg.frontend == "frames":
+        embeds = jnp.asarray(rng.standard_normal((b, t, cfg.d_model)),
+                             jnp.float32)
+        hidden = forward(params, cfg, embeds=embeds)
+    elif cfg.frontend == "patches":
+        fl = cfg.frontend_len
+        embeds = jnp.asarray(rng.standard_normal((b, fl, cfg.d_model)),
+                             jnp.float32)
+        tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, t - fl)),
+                             jnp.int32)
+        hidden = forward(params, cfg, tokens=tokens, embeds=embeds)
+    else:
+        tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, t)),
+                             jnp.int32)
+        hidden = forward(params, cfg, tokens=tokens)
+    w = lm_head_weight(params, cfg).astype(hidden.dtype)
+    ref_logits = np.asarray((hidden @ w).astype(jnp.float32))
+
+    cache = init_cache(cfg, b, t)
+    step = jax.jit(
+        lambda p, c, tok, pos, emb: decode_step(p, c, cfg, tok, pos,
+                                                embeds=emb),
+        static_argnames=())
+    got = []
+    for pos in range(t):
+        if cfg.frontend == "frames":
+            tok, emb = None, embeds[:, pos:pos + 1]
+        elif cfg.frontend == "patches":
+            if pos < cfg.frontend_len:
+                tok, emb = None, embeds[:, pos:pos + 1]
+            else:
+                tok, emb = tokens[:, pos - cfg.frontend_len:
+                                  pos - cfg.frontend_len + 1], None
+        else:
+            tok, emb = tokens[:, pos:pos + 1], None
+        logits, cache = decode_step(params, cache, cfg, tok,
+                                    jnp.int32(pos), embeds=emb)
+        got.append(np.asarray(logits))
+    got = np.stack(got, axis=1)
+    np.testing.assert_allclose(got, ref_logits, atol=2e-2, rtol=2e-2)
+
+
+def test_scan_attention_matches_dense():
+    r = np.random.default_rng(0)
+    b, s, h, d = 2, 64, 4, 16
+    q = jnp.asarray(r.standard_normal((b, s, h, d)), jnp.float32)
+    k = jnp.asarray(r.standard_normal((b, s, 2, d)), jnp.float32)
+    v = jnp.asarray(r.standard_normal((b, s, 2, d)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    for window in (None, 16):
+        out = scan_attention(q, k, v, pos, window=window, q_chunk=16,
+                             kv_chunk=16)
+        expect = ref.attention_ref(
+            q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+            causal=True, window=window).swapaxes(1, 2)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   atol=2e-3)
+
+
+def test_moe_matches_dense_reference():
+    """With generous capacity, sorted-dispatch MoE == explicit per-token
+    top-k mixture."""
+    cfg = ModelConfig(name="t", d_model=32, num_layers=1, num_heads=4,
+                      num_kv_heads=4, d_ff=64, vocab_size=64,
+                      pattern=(BlockCfg(ffn="moe"),), num_experts=4,
+                      top_k=2, capacity_factor=8.0)
+    r = np.random.default_rng(0)
+    params = {
+        "router": jnp.asarray(r.standard_normal((32, 4)) * 0.5, jnp.float32),
+        "w_gate": jnp.asarray(r.standard_normal((4, 32, 64)) * 0.1),
+        "w_up": jnp.asarray(r.standard_normal((4, 32, 64)) * 0.1),
+        "w_down": jnp.asarray(r.standard_normal((4, 64, 32)) * 0.1),
+    }
+    x = jnp.asarray(r.standard_normal((2, 8, 32)), jnp.float32)
+    got = moe_ffn(params, x, cfg)
+
+    probs = jax.nn.softmax(
+        jnp.einsum("bsd,de->bse", x, params["router"]), -1)
+    gate, idx = jax.lax.top_k(probs, 2)
+    gate = gate / gate.sum(-1, keepdims=True)
+    expect = jnp.zeros_like(x)
+    for e in range(4):
+        h = jax.nn.silu(x @ params["w_gate"][e]) * (x @ params["w_up"][e])
+        y = h @ params["w_down"][e]
+        wsel = jnp.sum(jnp.where(idx == e, gate, 0.0), -1)
+        expect += wsel[..., None] * y
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expect),
+                               atol=1e-4)
+
+
+def test_mamba_chunking_invariance():
+    cfg = get_smoke_config("jamba-v0.1-52b")
+    r = np.random.default_rng(0)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    p = jax.tree.map(lambda a: a[0], params["blocks"]["b0"]["mamba"])
+    x = jnp.asarray(r.standard_normal((2, 24, cfg.d_model)), jnp.float32)
+    y1 = ssm.mamba_mix(p, x, cfg, chunk=4)
+    y2 = ssm.mamba_mix(p, x, cfg, chunk=24)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+
+
+def test_rwkv_chunking_invariance():
+    cfg = get_smoke_config("rwkv6-3b")
+    r = np.random.default_rng(0)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    p = jax.tree.map(lambda a: a[0], params["blocks"]["b0"]["rwkv"])
+    x = jnp.asarray(r.standard_normal((2, 24, cfg.d_model)), jnp.float32)
+    y1 = ssm.rwkv_mix(p, x, cfg, chunk=4)
+    y2 = ssm.rwkv_mix(p, x, cfg, chunk=24)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+
+
+def test_scan_vs_unrolled_layers():
+    import dataclasses
+    cfg = dataclasses.replace(get_smoke_config("olmo-1b"),
+                              compute_dtype="float32")
+    cfg_unroll = ModelConfig(**{**cfg.__dict__, "scan_layers": False,
+                                "name": "u"})
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    r = np.random.default_rng(0)
+    tokens = jnp.asarray(r.integers(0, cfg.vocab_size, (2, 8)), jnp.int32)
+    h1 = forward(params, cfg, tokens=tokens)
+    h2 = forward(params, cfg_unroll, tokens=tokens)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-5)
+
+
+def test_param_counts_match_published_scale():
+    """Full configs land near their nameplate parameter counts."""
+    expect = {
+        "gemma3-12b": (10e9, 14e9),
+        "olmo-1b": (1.0e9, 1.4e9),
+        "starcoder2-15b": (13e9, 17e9),
+        "gemma3-4b": (3.5e9, 5.5e9),
+        "rwkv6-3b": (2.5e9, 3.6e9),
+        "jamba-v0.1-52b": (45e9, 58e9),
+        # the assigned hyperparameters (48L, 64 experts, d_ff 1408) give
+        # 27.7B total / 3.6B active: active matches the "a3b" moniker; the
+        # "16b" nameplate would need fewer/narrower experts than assigned
+        "moonshot-v1-16b-a3b": (25e9, 30e9),
+        "granite-moe-3b-a800m": (2.5e9, 4e9),
+        "musicgen-medium": (1.2e9, 2.2e9),
+        "internvl2-76b": (68e9, 82e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, (arch, n)

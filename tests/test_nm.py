@@ -1,0 +1,62 @@
+"""N:M structured sparsity: pack/unpack, pruning structure, kernel sweeps."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.nm_spmm import nm_spmm
+from repro.sparse.nm import NmWeight, pack_nm, prune_nm, unpack_nm
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.sampled_from([(1, 4), (2, 4), (2, 8)]))
+def test_prune_nm_structure(seed, nm):
+    n, m = nm
+    r = np.random.default_rng(seed)
+    w = r.standard_normal((64, 32)).astype(np.float32)
+    p = prune_nm(w, n, m)
+    nnz_per_group = (p.reshape(64 // m, m, 32) != 0).sum(1)
+    assert (nnz_per_group <= n).all()
+    # kept entries are the group-wise largest magnitudes
+    groups = np.abs(w.reshape(64 // m, m, 32))
+    kept = np.abs(p.reshape(64 // m, m, 32))
+    for g in range(64 // m):
+        for c in range(32):
+            thresh = np.sort(groups[g, :, c])[-n]
+            assert (kept[g, :, c][kept[g, :, c] > 0] >= thresh - 1e-6).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.sampled_from([(1, 4), (2, 4)]))
+def test_pack_unpack_roundtrip(seed, nm):
+    n, m = nm
+    r = np.random.default_rng(seed)
+    w = prune_nm(r.standard_normal((256, 128)).astype(np.float32), n, m)
+    nw = pack_nm(w, n, m, block=(128, 128))
+    np.testing.assert_array_equal(np.asarray(unpack_nm(nw)), w)
+    itemsize = 4  # f32 values in this test; bf16 gives (2K)/(K/m*n*3)
+    expect_comp = (itemsize * 256 * 128) / (
+        (256 // m * n * 128) * (itemsize + 1))
+    assert nw.compression == pytest.approx(expect_comp, rel=0.01)
+
+
+@pytest.mark.parametrize("mk,nm,block", [
+    ((128, 256, 128), (1, 4), (128, 128)),
+    ((128, 256, 256), (2, 4), (128, 128)),
+    ((256, 128, 128), (1, 4), (64, 64)),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_nm_spmm_kernel_sweep(mk, nm, block, dtype):
+    m_rows, k, n_cols = mk
+    n, m = nm
+    r = np.random.default_rng(hash((mk, nm)) % 2**32)
+    w = prune_nm(r.standard_normal((k, n_cols)).astype(np.float32), n, m)
+    nw = pack_nm(w.astype(dtype), n, m, block=block)
+    x = jnp.asarray(r.standard_normal((m_rows, k)), dtype)
+    out = nm_spmm(x, nw, interpret=True)
+    expect = jnp.dot(x, jnp.asarray(w, dtype),
+                     preferred_element_type=jnp.float32).astype(dtype)
+    atol = (2e-2 if dtype == jnp.bfloat16 else 2e-3) * np.sqrt(k)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=atol, rtol=1e-2)

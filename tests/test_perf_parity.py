@@ -1,0 +1,67 @@
+"""The §Perf optimizations must be *numerically* equivalent to baseline
+mode — sharding/layout changes are allowed to change traffic, never math."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import forward, init_params, loss_fn
+from repro.models.layers import moe_ffn
+from repro.models.config import BlockCfg, ModelConfig
+
+
+def _with_mode(mode, fn):
+    old = os.environ.get("REPRO_PERF_MODE")
+    try:
+        if mode:
+            os.environ["REPRO_PERF_MODE"] = mode
+        else:
+            os.environ.pop("REPRO_PERF_MODE", None)
+        return fn()
+    finally:
+        if old is None:
+            os.environ.pop("REPRO_PERF_MODE", None)
+        else:
+            os.environ["REPRO_PERF_MODE"] = old
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "gemma3-12b",
+                                  "granite-moe-3b-a800m"])
+def test_loss_parity_baseline_vs_optimized(arch, rng):
+    cfg = get_smoke_config(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)),
+                              jnp.int32),
+        "targets": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)),
+                               jnp.int32),
+    }
+    base = _with_mode("baseline",
+                      lambda: float(loss_fn(params, batch, cfg)[0]))
+    opt = _with_mode(None, lambda: float(loss_fn(params, batch, cfg)[0]))
+    assert base == pytest.approx(opt, abs=2e-4)
+
+
+def test_moe_parity_per_row_vs_global_dispatch(rng):
+    """With capacity high enough that neither variant drops tokens, the
+    per-row and global dispatch must agree exactly."""
+    cfg = ModelConfig(name="t", d_model=32, num_layers=1, num_heads=4,
+                      num_kv_heads=4, d_ff=64, vocab_size=64,
+                      pattern=(BlockCfg(ffn="moe"),), num_experts=4,
+                      top_k=2, capacity_factor=8.0)
+    params = {
+        "router": jnp.asarray(rng.standard_normal((32, 4)), jnp.float32),
+        "w_gate": jnp.asarray(rng.standard_normal((4, 32, 64)) * 0.1,
+                              jnp.float32),
+        "w_up": jnp.asarray(rng.standard_normal((4, 32, 64)) * 0.1,
+                            jnp.float32),
+        "w_down": jnp.asarray(rng.standard_normal((4, 64, 32)) * 0.1,
+                              jnp.float32),
+    }
+    x = jnp.asarray(rng.standard_normal((3, 8, 32)), jnp.float32)
+    a = _with_mode("baseline", lambda: np.asarray(moe_ffn(params, x, cfg)))
+    b = _with_mode(None, lambda: np.asarray(moe_ffn(params, x, cfg)))
+    np.testing.assert_allclose(a, b, atol=1e-5)
