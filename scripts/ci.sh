@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Tier-1 gate + serving smoke. Run from anywhere; no PYTHONPATH needed
+# (pyproject.toml sets pythonpath=src for pytest; the serve smoke exports
+# it for the module launch).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1: full test suite =="
+python -m pytest -x -q
+
+echo "== serving smoke: continuous batching + bitmap-compressed head =="
+PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --smoke \
+    --sparsity 0.5 --slots 2 --requests 6 --max-len 64
+
+echo "CI OK"

@@ -1,0 +1,26 @@
+"""Version compatibility helpers for jax APIs (single home — see also
+kernels/pallas_compat.py for the Pallas-specific aliases).
+
+``jax.shard_map`` is top-level only in newer jax; 0.4.x keeps it under
+``jax.experimental.shard_map`` and names the replication-check kwarg
+``check_rep`` instead of ``check_vma``.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+shard_map = getattr(jax, "shard_map", None)
+if shard_map is None:
+    from jax.experimental.shard_map import shard_map
+
+_CHECK_KW = ("check_vma"
+             if "check_vma" in inspect.signature(shard_map).parameters
+             else "check_rep")
+
+
+def shard_map_nocheck(f, mesh, in_specs, out_specs):
+    """shard_map with the replication check disabled, any jax version."""
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     **{_CHECK_KW: False})

@@ -94,6 +94,12 @@ def simulate(bmi: np.ndarray, bmw: np.ndarray,
     """
     bmi = np.asarray(bmi, bool)
     bmw = np.asarray(bmw, bool)
+    if (vi is None) != (vw is None):
+        raise ValueError(
+            "simulate() needs vi and vw together (got "
+            f"vi={'set' if vi is not None else None}, "
+            f"vw={'set' if vw is not None else None}); pass both packed "
+            "value arrays or neither")
     streams: EimStreams = eim_streams(bmi, bmw)
     *lead, m, n, lmax = streams.eff_i.shape
     lead = tuple(lead)
@@ -127,7 +133,6 @@ def simulate(bmi: np.ndarray, bmw: np.ndarray,
     INF = np.int64(EimStreams.INVALID)
     ptr = np.zeros((t, m, n), np.int64)
     done = ptr >= length                      # PEs with empty FIFOs are done
-    was_idle = np.zeros((t, m, n), bool)      # idle PEs keep their pair
     tile_alive = ~done.reshape(t, -1).all(-1)
 
     cycles = np.zeros(t, np.int64)
@@ -193,7 +198,6 @@ def simulate(bmi: np.ndarray, bmw: np.ndarray,
         # -- execute MACs
         if compute_values:
             f_t, f_m, f_n = np.nonzero(fire)
-            p = cur_p[f_t, f_m, f_n]
             prod = (vi[f_t, f_m, ei[f_t, f_m, f_n]].astype(np.float64)
                     * vw[f_t, f_n, ew[f_t, f_m, f_n]])
             np.add.at(acc, (f_t, f_m, f_n), prod)
@@ -201,7 +205,6 @@ def simulate(bmi: np.ndarray, bmw: np.ndarray,
         idle_pe_cycles += int((active & ~fire).sum())
 
         ptr = ptr + fire
-        was_idle = active & ~fire
         done = ptr >= length
         cycles += tile_alive
         tile_alive = ~done.reshape(t, -1).all(-1)

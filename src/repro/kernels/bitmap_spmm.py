@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import pallas_compat
+
 from repro.sparse.format import BitmapWeight
 
 
@@ -89,7 +91,7 @@ def bitmap_spmm(x: jax.Array, w: BitmapWeight, *, bm: int = 128,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kq: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="bitmap_spmm",

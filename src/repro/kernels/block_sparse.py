@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import pallas_compat
+
 from repro.sparse.format import BlockSparseWeight
 
 
@@ -74,7 +76,7 @@ def block_sparse_matmul(x: jax.Array, w: BlockSparseWeight, *, bm: int = 128,
         functools.partial(_kernel, smax=smax),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="block_sparse_matmul",

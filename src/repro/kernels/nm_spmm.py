@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import pallas_compat
+
 from repro.sparse.nm import NmWeight
 
 
@@ -71,7 +73,7 @@ def nm_spmm(x: jax.Array, w: NmWeight, *, bm: int = 128,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kq: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mm, n_cols), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pallas_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="nm_spmm",

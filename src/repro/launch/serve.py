@@ -1,86 +1,120 @@
-"""Batched serving driver: prefill-free batch decode with sparse weights.
+"""Serving CLI: thin driver over the continuous-batching engine.
 
-Demonstrates the paper's technique at serving time: model weights are
-global-L1 pruned and (optionally) converted to the bitmap format whose HBM
-traffic the Pallas ``bitmap_spmm`` kernel cuts by ~the density ratio —
-decode is memory-bound, so this directly attacks the dominant roofline term
-(EXPERIMENTS.md §Perf).
+The old straight-line decode loop now lives in ``repro.serve.ServeEngine``:
+a request queue + slot scheduler + slotted KV cache keep decode running at
+full batch width under staggered arrivals, with the model's L1-pruned
+weights and the LM head streamed in the paper's bitmap-compressed format
+through the ``kernels/ops`` dispatch (see DESIGN.md / EXPERIMENTS.md §Perf).
 
-Run (CPU example):
+Run (CPU example, staggered Poisson arrivals):
   PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --smoke \
-      --batch 4 --steps 32
+      --sparsity 0.5
 """
 from __future__ import annotations
 
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config, get_smoke_config
-from repro.launch import sharding as shd
-from repro.launch.mesh import make_elastic_mesh
-from repro.launch.steps import build_serve_step
-from repro.models.model import init_cache, init_params
-from repro.sparse.pruning import global_l1_prune, sparsity_of
+from repro.serve import ServeEngine, poisson_trace
 
 
 def serve(arch: str, smoke: bool = True, batch: int = 4, steps: int = 32,
           max_len: int = 128, sparsity: float = 0.0, seed: int = 0,
           model_parallel: int = 1) -> dict:
-    cfg = get_smoke_config(arch) if smoke else get_config(arch)
-    mesh = make_elastic_mesh(model_parallel)
-    params = init_params(jax.random.PRNGKey(seed), cfg)
+    """Lock-step compatibility wrapper: ``batch`` simultaneous requests,
+    each decoding ``steps`` tokens — the old serve() contract, now routed
+    through the engine (returns the (batch, steps) greedy token matrix).
+
+    ``head_sparsity=0.0`` keeps the old contract's *numerics*: the LM
+    head streams through the bitmap path but unpruned, so for
+    token-frontend archs the greedy tokens match the pre-engine
+    straight-line loop (which served a dense head) exactly.  Frames-
+    frontend archs (musicgen) draw their per-step embeds from the
+    engine's RNG stream, which is offset by the warmup draw — same
+    distribution, different sequence than the old loop.
+    """
+    eng = ServeEngine.from_arch(arch, smoke=smoke, num_slots=batch,
+                                max_len=max_len, sparsity=sparsity,
+                                seed=seed, model_parallel=model_parallel,
+                                head_sparsity=0.0)
     if sparsity > 0:
-        params = global_l1_prune(params, sparsity)
-        print(f"serving at {sparsity_of(params):.2%} weight sparsity")
-
-    pspecs = shd.named(mesh, shd.param_specs(cfg, mesh))
-    params = jax.device_put(params, pspecs)
-    cache = init_cache(cfg, batch, max_len)
-    step_fn = build_serve_step(cfg)
+        print(f"serving at {eng.weight_sparsity:.2%} weight sparsity "
+              f"(head compression {eng.head_compression:.2f}x)")
     rng = np.random.default_rng(seed)
+    first = rng.integers(0, eng.cfg.vocab_size, (batch, 1))
+    with eng.mesh:
+        reqs = [eng.submit([int(first[b, 0])], max_new_tokens=steps)
+                for b in range(batch)]
+        rep = eng.run()
+    tokens = np.stack([np.asarray(r.tokens, np.int32) for r in reqs])
+    print(f"decoded {steps} steps x batch {batch} in {rep['wall_s']:.2f}s "
+          f"({rep['tok_per_s']:.1f} tok/s)")
+    return {"tokens": tokens, "tok_per_s": rep["tok_per_s"],
+            "report": rep}
 
-    with mesh:
-        jit_step = jax.jit(step_fn, donate_argnums=(1,))
-        tok = jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, 1)),
-                          jnp.int32)
-        toks_out = []
-        t0 = time.time()
-        for pos in range(steps):
-            if cfg.frontend == "frames":
-                emb = jnp.asarray(rng.standard_normal(
-                    (batch, 1, cfg.d_model)), jnp.float32)
-                nxt, logits, cache = jit_step(params, cache, None,
-                                              jnp.int32(pos), embeds=emb)
-            else:
-                nxt, logits, cache = jit_step(params, cache, tok,
-                                              jnp.int32(pos))
-            tok = nxt[:, None]
-            toks_out.append(np.asarray(nxt))
-        dt = time.time() - t0
-    tokens = np.stack(toks_out, 1)
-    tps = batch * steps / dt
-    print(f"decoded {steps} steps x batch {batch} in {dt:.2f}s "
-          f"({tps:.1f} tok/s)")
-    return {"tokens": tokens, "tok_per_s": tps}
+
+def serve_trace(arch: str, smoke: bool = True, slots: int = 4,
+                requests: int = 8, rate: float = 0.5, max_len: int = 128,
+                max_new: tuple = (8, 24), sparsity: float = 0.0,
+                head_sparsity: float | None = None, seed: int = 0,
+                model_parallel: int = 1, verbose: bool = True) -> dict:
+    """Continuous-batching mode: seeded Poisson arrivals into the engine.
+
+    ``head_sparsity`` defaults to ``sparsity`` (the serving regime: the
+    LM head is per-tensor pruned before bitmap packing); pass 0.0 to
+    stream the exact dense head.
+    """
+    eng = ServeEngine.from_arch(arch, smoke=smoke, num_slots=slots,
+                                max_len=max_len, sparsity=sparsity,
+                                head_sparsity=head_sparsity,
+                                seed=seed, model_parallel=model_parallel)
+    prompt_len = (1, min(4, max_len))
+    hi = max(1, min(max_new[1], max_len - prompt_len[1] + 1))
+    lo = max(1, min(max_new[0], hi))
+    trace = poisson_trace(requests, rate=rate, seed=seed,
+                          vocab_size=eng.cfg.vocab_size,
+                          prompt_len=prompt_len, max_new=(lo, hi))
+    with eng.mesh:
+        for spec in trace:
+            eng.submit(**spec)
+        rep = eng.run()
+    if verbose:
+        if sparsity > 0:
+            print(f"serving at {eng.weight_sparsity:.2%} weight sparsity "
+                  f"(head compression {eng.head_compression:.2f}x)")
+        lat, ftl = rep["latency_s"], rep["first_token_s"]
+        print(f"{rep['requests']} requests / {rep['generated_tokens']} "
+              f"tokens in {rep['wall_s']:.2f}s over {slots} slots "
+              f"(occupancy {rep['slot_occupancy']:.0%})")
+        print(f"  throughput {rep['tok_per_s']:.1f} tok/s | latency "
+              f"p50 {lat['p50'] * 1e3:.1f}ms p99 {lat['p99'] * 1e3:.1f}ms "
+              f"| first-token p50 {ftl['p50'] * 1e3:.1f}ms "
+              f"p99 {ftl['p99'] * 1e3:.1f}ms")
+    return rep
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo-1b")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--slots", "--batch", dest="slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=0.5,
+                    help="mean arrivals per decode step (Poisson)")
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--sparsity", type=float, default=0.0)
+    ap.add_argument("--head-sparsity", type=float, default=None,
+                    help="LM-head prune level before bitmap packing "
+                         "(default: --sparsity; 0 = exact dense head)")
     ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-    serve(args.arch, smoke=args.smoke, batch=args.batch, steps=args.steps,
-          max_len=args.max_len, sparsity=args.sparsity,
-          model_parallel=args.model_parallel)
+    serve_trace(args.arch, smoke=args.smoke, slots=args.slots,
+                requests=args.requests, rate=args.rate,
+                max_len=args.max_len, sparsity=args.sparsity,
+                head_sparsity=args.head_sparsity,
+                seed=args.seed, model_parallel=args.model_parallel)
 
 
 if __name__ == "__main__":

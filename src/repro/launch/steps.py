@@ -97,13 +97,22 @@ def build_prefill_step(cfg: ModelConfig) -> Callable:
     return prefill_step
 
 
-def build_serve_step(cfg: ModelConfig) -> Callable:
+def build_serve_step(cfg: ModelConfig, impl: Optional[str] = None
+                     ) -> Callable:
     """One decode step + greedy head: (params, cache, tokens/embeds, pos)
-    -> (next_token, logits, new_cache)."""
+    -> (next_token, logits, new_cache).
 
-    def serve_step(params, cache, tokens, pos, embeds=None):
+    ``pos`` may be a scalar (classic lock-step decode) or a (B,) vector of
+    per-slot positions (continuous batching).  ``lm_weight`` (a
+    ``BitmapWeight``) routes the LM head through the bitmap-compressed
+    ``kernels/ops.bitmap_spmm`` path; ``impl`` pins the kernel dispatch
+    ("xla" | "pallas" | "pallas_interpret", default backend-chosen).
+    """
+
+    def serve_step(params, cache, tokens, pos, embeds=None, lm_weight=None):
         logits, new_cache = decode_step(params, cache, cfg, tokens, pos,
-                                        embeds=embeds)
+                                        embeds=embeds, lm_weight=lm_weight,
+                                        lm_impl=impl)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return next_tok, logits, new_cache
 

@@ -173,7 +173,9 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      ring: bool = False) -> jax.Array:
     """Single-token attention against a cache.
 
-    q: (B, 1, Hq, D); caches: (B, C, Hkv, D); pos: scalar current position.
+    q: (B, 1, Hq, D); caches: (B, C, Hkv, D); pos: scalar current position,
+    or a (B,) vector of per-sequence positions (continuous batching: each
+    batch slot decodes at its own offset).
     ``ring`` marks a sliding-window ring buffer of size C == window.
     """
     from repro.models.perf_flags import baseline_mode
@@ -192,19 +194,21 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     s = jnp.einsum("bkgd,bckd->bkgc", qh, k_cache,
                    preferred_element_type=jnp.float32) * scale
     s = s.reshape(b, hq, c)
-    slots = jnp.arange(c)
+    pos = jnp.asarray(pos)
+    pc = (jnp.broadcast_to(pos, (b,)) if pos.ndim == 0 else pos)[:, None]
+    slots = jnp.arange(c)[None, :]
     if ring:
         # slot i holds the latest position p <= pos with p % C == i;
         # cold slots imply p < 0 and must be masked out
-        base = pos - (pos % c)
-        slot_pos = jnp.where(slots <= (pos % c), base + slots,
+        base = pc - (pc % c)
+        slot_pos = jnp.where(slots <= (pc % c), base + slots,
                              base - c + slots)
     else:
-        slot_pos = slots
-    valid = (slot_pos <= pos) & (slot_pos >= 0)
+        slot_pos = jnp.broadcast_to(slots, (b, c))
+    valid = (slot_pos <= pc) & (slot_pos >= 0)
     if window is not None:
-        valid &= (pos - slot_pos) < window
-    s = jnp.where(valid[None, None, :], s, -1e30)
+        valid &= (pc - slot_pos) < window
+    s = jnp.where(valid[:, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1).reshape(b, hkv, g, c)
     out = jnp.einsum("bkgc,bckd->bkgd", p.astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)

@@ -362,29 +362,43 @@ def _decode_attn(p: Dict, x: jax.Array, cache: Dict, cfg: ModelConfig,
     if cfg.qk_norm:
         q = L.norm(q, p["q_norm"], "rmsnorm")
         k = L.norm(k, p["k_norm"], "rmsnorm")
-    posb = jnp.broadcast_to(pos[None], (b,))[:, None]
+    pos = jnp.asarray(pos)
+    posv = jnp.broadcast_to(pos, (b,)) if pos.ndim == 0 else pos
+    posb = posv[:, None]
     q = L.rope(q, posb, cfg.rope_theta)
     k = L.rope(k, posb, cfg.rope_theta)
     c = cache["k"].shape[1]
     ring = blk.window is not None and c == blk.window
-    slot = (pos % c) if ring else pos
-    k_cache = jax.lax.dynamic_update_slice_in_dim(
-        cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(
-        cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+    if pos.ndim == 0:
+        slot = (pos % c) if ring else pos
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+    else:
+        # per-slot positions (continuous batching): each batch row writes
+        # its own cache line, so the update is a batched scatter
+        slot = (posv % c) if ring else jnp.clip(posv, 0, c - 1)
+        bidx = jnp.arange(b)
+        k_cache = cache["k"].at[bidx, slot].set(
+            k[:, 0].astype(cache["k"].dtype))
+        v_cache = cache["v"].at[bidx, slot].set(
+            v[:, 0].astype(cache["v"].dtype))
     o = L.decode_attention(q, k_cache, v_cache, pos, window=blk.window,
                            ring=ring)
     out = o.reshape(b, 1, h * hd) @ p["wo"].astype(dt_)
     return out, {"k": k_cache, "v": v_cache}
 
 
-def decode_step(params: Dict, cache: Dict, cfg: ModelConfig,
-                tokens: Optional[jax.Array], pos: jax.Array,
-                embeds: Optional[jax.Array] = None
-                ) -> Tuple[jax.Array, Dict]:
-    """One decode step. tokens: (B, 1) (or embeds (B, 1, D)); pos: scalar.
+def decode_hidden(params: Dict, cache: Dict, cfg: ModelConfig,
+                  tokens: Optional[jax.Array], pos: jax.Array,
+                  embeds: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, Dict]:
+    """One decode step up to (and including) the final norm — no LM head.
 
-    Returns (logits (B, V), new cache).  Scans over periods, carrying the
+    tokens: (B, 1) (or embeds (B, 1, D)); pos: scalar shared position or a
+    (B,) vector of per-slot positions (continuous batching).  Returns
+    (hidden (B, 1, D), new cache).  Scans over periods, carrying the
     hidden state and threading each period's cache slice through as
     scan xs/ys.
     """
@@ -430,9 +444,29 @@ def decode_step(params: Dict, cache: Dict, cfg: ModelConfig,
         return x, new_cache
 
     x, new_cache = jax.lax.scan(period_fn, x, (params["blocks"], cache))
-    x = L.norm(x, params.get("final_norm"), cfg.norm)
-    w = lm_head_weight(params, cfg).astype(x.dtype)
-    logits = (x[:, 0] @ w).astype(jnp.float32)
+    return L.norm(x, params.get("final_norm"), cfg.norm), new_cache
+
+
+def head_logits(params: Dict, cfg: ModelConfig, hidden: jax.Array,
+                lm_weight=None, lm_impl: Optional[str] = None) -> jax.Array:
+    """LM head over (B, D) hidden states -> (B, V) f32 logits.
+
+    ``lm_weight`` (a ``BitmapWeight``) switches the head matmul onto the
+    bitmap-compressed path through ``kernels/ops.bitmap_spmm`` — the
+    serving engine packs the head once and streams it compressed, so the
+    dominant decode weight-traffic term runs the paper's format end-to-end.
+    """
+    if lm_weight is None:
+        w = lm_head_weight(params, cfg).astype(hidden.dtype)
+        logits = (hidden @ w).astype(jnp.float32)
+    else:
+        from repro.kernels import ops
+        # decode batches are far below the kernel's default 128-row tile;
+        # the M grid must divide the batch exactly
+        m = hidden.shape[0]
+        logits = ops.bitmap_spmm(hidden, lm_weight, impl=lm_impl,
+                                 bm=(128 if m % 128 == 0 else m)
+                                 ).astype(jnp.float32)
     from repro.models.perf_flags import baseline_mode
     if not baseline_mode():
         # §Perf: keep decode logits vocab-sharded — otherwise GSPMD
@@ -441,4 +475,14 @@ def decode_step(params: Dict, cache: Dict, cfg: ModelConfig,
         logits = shard_utils.hint(logits, "batch", "model")
     if cfg.logit_softcap:
         logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
-    return logits, new_cache
+    return logits
+
+
+def decode_step(params: Dict, cache: Dict, cfg: ModelConfig,
+                tokens: Optional[jax.Array], pos: jax.Array,
+                embeds: Optional[jax.Array] = None, lm_weight=None,
+                lm_impl: Optional[str] = None) -> Tuple[jax.Array, Dict]:
+    """One decode step + LM head: (logits (B, V), new cache)."""
+    x, new_cache = decode_hidden(params, cache, cfg, tokens, pos,
+                                 embeds=embeds)
+    return head_logits(params, cfg, x[:, 0], lm_weight, lm_impl), new_cache

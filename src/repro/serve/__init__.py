@@ -1,0 +1,11 @@
+"""Continuous-batching sparse serving engine (queue, slots, KV reuse)."""
+from repro.serve.cache import SlotKVCache
+from repro.serve.engine import ServeEngine, pack_lm_head
+from repro.serve.request import Request, RequestState
+from repro.serve.scheduler import SlotScheduler
+from repro.serve.trace import percentiles, poisson_trace
+
+__all__ = [
+    "Request", "RequestState", "ServeEngine", "SlotKVCache", "SlotScheduler",
+    "pack_lm_head", "percentiles", "poisson_trace",
+]

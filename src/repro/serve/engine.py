@@ -1,0 +1,255 @@
+"""Continuous-batching serving engine over the sparse decode stack.
+
+The engine turns the straight-line ``serve()`` loop into a serving
+system:
+
+* a request queue with per-request prompt / generation-budget state
+  (``repro.serve.request``);
+* a slot scheduler that admits new requests into freed batch slots
+  mid-flight — no drain barrier, decode keeps running at full batch
+  width under a stream of arrivals (``repro.serve.scheduler``);
+* a slotted KV-cache manager that reuses one donated ``init_cache``
+  allocation across request lifetimes (``repro.serve.cache``);
+* weights pruned once (``global_l1_prune``) and the LM head packed once
+  into the paper's ``BitmapWeight`` format, dispatched through
+  ``kernels/ops.bitmap_spmm`` every step — the bitmap-compressed HBM
+  path runs end-to-end at serve time.
+
+Positions are per-slot: the decode step takes a (B,) position vector so
+each slot advances through its own sequence independently (the models
+layer grew vector-position support for exactly this).
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.launch import sharding as shd
+from repro.launch.mesh import make_elastic_mesh
+from repro.launch.steps import build_serve_step
+from repro.models.config import ModelConfig
+from repro.models.model import init_params, lm_head_weight
+from repro.serve.cache import SlotKVCache
+from repro.serve.request import Request, RequestState
+from repro.serve.scheduler import SlotScheduler
+from repro.serve.trace import percentiles
+from repro.sparse.format import BitmapWeight, pack_bitmap
+from repro.sparse.pruning import global_l1_prune, per_tensor_prune, \
+    sparsity_of
+
+
+def _head_block(d_model: int, vocab: int,
+                cap: int = 128) -> Optional[Tuple[int, int]]:
+    """Largest (BK, BN) bitmap tile that divides the head; BN % 8 == 0."""
+    bk = next((d for d in range(min(d_model, cap), 0, -1)
+               if d_model % d == 0), None)
+    bn = next((d for d in range(min(vocab, cap), 0, -1)
+               if vocab % d == 0 and d % 8 == 0), None)
+    if bk is None or bn is None:
+        return None
+    return bk, bn
+
+
+def pack_lm_head(params, cfg: ModelConfig, sparsity: float = 0.0
+                 ) -> Optional[BitmapWeight]:
+    """Prune (per-tensor) + pack the (D, V) LM head once for serving."""
+    block = _head_block(cfg.d_model, cfg.vocab_size)
+    if block is None:
+        return None
+    w = lm_head_weight(params, cfg)
+    if sparsity > 0:
+        w = per_tensor_prune(w, sparsity)
+    return pack_bitmap(np.asarray(w.astype(jnp.float32)), block=block)
+
+
+class ServeEngine:
+    """Continuous-batching decode over ``num_slots`` batch slots."""
+
+    def __init__(self, cfg: ModelConfig, *, num_slots: int = 4,
+                 max_len: int = 128, sparsity: float = 0.0, seed: int = 0,
+                 model_parallel: int = 1, impl: Optional[str] = None,
+                 bitmap_head: bool = True,
+                 head_sparsity: Optional[float] = None):
+        """``head_sparsity``: ``global_l1_prune`` deliberately keeps
+        (tied) embeddings dense, so the LM head is additionally pruned
+        per-tensor to this level before packing — that is what gives the
+        bitmap head its compression at serve time.  Defaults to
+        ``sparsity``; pass 0.0 to stream the exact dense head through the
+        bitmap path instead (compression < 1, numerics identical to the
+        dense head)."""
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.sparsity = sparsity
+        self.mesh = make_elastic_mesh(model_parallel)
+
+        params = init_params(jax.random.PRNGKey(seed), cfg)
+        if sparsity > 0:
+            params = global_l1_prune(params, sparsity)
+        self.weight_sparsity = sparsity_of(params) if sparsity > 0 else 0.0
+        pspecs = shd.named(self.mesh, shd.param_specs(cfg, self.mesh))
+        self.params = jax.device_put(params, pspecs)
+
+        # pack once, cache on the engine: every decode step streams the
+        # head through the bitmap-compressed kernels/ops path
+        self.head_sparsity = (sparsity if head_sparsity is None
+                              else head_sparsity)
+        self.lm_weight = (pack_lm_head(self.params, cfg, self.head_sparsity)
+                          if bitmap_head else None)
+        self.head_compression = (self.lm_weight.compression
+                                 if self.lm_weight is not None else 1.0)
+
+        self.scheduler = SlotScheduler(num_slots)
+        self.kv = SlotKVCache(cfg, num_slots, max_len)
+        step_fn = build_serve_step(cfg, impl=impl)
+        self._jit_step = jax.jit(step_fn, donate_argnums=(1,))
+
+        self._rng = np.random.default_rng(seed)
+        self._tok = np.zeros(num_slots, np.int32)
+        self._pos = np.zeros(num_slots, np.int32)
+        self._warm = False
+        self._steps = 0
+        self._active_slot_steps = 0     # occupancy accounting
+        self._next_rid = 0
+        self.requests: List[Request] = []
+        self._t0: Optional[float] = None
+
+    @classmethod
+    def from_arch(cls, arch: str, smoke: bool = True, **kw) -> "ServeEngine":
+        cfg = get_smoke_config(arch) if smoke else get_config(arch)
+        return cls(cfg, **kw)
+
+    # ------------------------------------------------------------ intake ----
+
+    def submit(self, prompt: Sequence[int], max_new_tokens: int,
+               arrival: float = 0.0) -> Request:
+        prompt = [int(t) for t in prompt]
+        assert prompt, "empty prompt"
+        assert len(prompt) + max_new_tokens - 1 <= self.max_len, (
+            f"prompt {len(prompt)} + {max_new_tokens} new tokens exceeds "
+            f"max_len {self.max_len}")
+        req = Request(rid=self._next_rid, prompt=prompt,
+                      max_new_tokens=max_new_tokens, arrival=arrival)
+        self._next_rid += 1
+        self.requests.append(req)
+        self.scheduler.submit(req)
+        return req
+
+    # ------------------------------------------------------------- loop ----
+
+    def _wall(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def _decode(self, tok: jnp.ndarray, pos: jnp.ndarray):
+        if self.cfg.frontend == "frames":
+            emb = jnp.asarray(self._rng.standard_normal(
+                (self.num_slots, 1, self.cfg.d_model)), jnp.float32)
+            return self._jit_step(self.params, self.kv.cache, None, pos,
+                                  embeds=emb, lm_weight=self.lm_weight)
+        return self._jit_step(self.params, self.kv.cache, tok, pos,
+                              lm_weight=self.lm_weight)
+
+    def warmup(self) -> None:
+        """Compile the decode step + slot reset before the latency clock
+        starts — otherwise the first request's percentiles measure XLA
+        compile time, not serving.  Slots are all idle here; whatever the
+        throwaway step writes at position 0 is zeroed again on admission.
+        """
+        if self._warm:
+            return
+        nxt, _, cache = self._decode(jnp.asarray(self._tok[:, None]),
+                                     jnp.asarray(self._pos))
+        jax.block_until_ready(nxt)
+        self.kv.cache = cache
+        self.kv.warmup()
+        self._warm = True
+
+    def step(self) -> None:
+        """One full-batch decode step: admit, decode, route outputs."""
+        self.warmup()
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        now = float(self._steps)
+        for r in self.scheduler.waiting:
+            if r.arrival <= now and r.t_due is None:
+                r.t_due = self._wall()
+        for slot, req in self.scheduler.admit(now):
+            self.kv.reset_slot(slot)
+            self._pos[slot] = 0
+            self._tok[slot] = req.prompt[0]
+            req.admit_step = self._steps
+            if req.t_due is None:
+                req.t_due = self._wall()
+
+        nxt, _, cache = self._decode(jnp.asarray(self._tok[:, None]),
+                                     jnp.asarray(self._pos))
+        self.kv.cache = cache
+        nxt_host = np.asarray(nxt)
+        wall = self._wall()
+
+        self._active_slot_steps += self.scheduler.num_active
+        for slot, req in list(self.scheduler.active.items()):
+            p = int(self._pos[slot])
+            self._pos[slot] = p + 1
+            if p + 1 < len(req.prompt):
+                # still consuming the prompt: teacher-force the next token
+                self._tok[slot] = req.prompt[p + 1]
+                continue
+            t = int(nxt_host[slot])
+            req.tokens.append(t)
+            if req.t_first is None:
+                req.t_first = wall
+            self._tok[slot] = t
+            if (len(req.tokens) >= req.max_new_tokens
+                    or p + 1 >= self.max_len):
+                req.t_done = wall
+                req.done_step = self._steps
+                self.scheduler.release(slot)
+                self._pos[slot] = 0
+        self._steps += 1
+
+    def run(self) -> dict:
+        """Drive until every submitted request has drained; report stats."""
+        self.warmup()
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        while self.scheduler.has_work:
+            if not self.scheduler.active:
+                # idle: fast-forward the step clock to the next arrival
+                nxt = self.scheduler.next_arrival()
+                if nxt > self._steps:
+                    self._steps = int(math.ceil(nxt))
+            self.step()
+        return self.report()
+
+    # ---------------------------------------------------------- reports ----
+
+    def report(self) -> dict:
+        done = [r for r in self.requests if r.state == RequestState.DONE]
+        dt = self._wall() if self._t0 is not None else 0.0
+        gen = sum(len(r.tokens) for r in done)
+        lat = percentiles([r.latency_s for r in done
+                           if r.latency_s is not None])
+        ftl = percentiles([r.first_token_s for r in done
+                           if r.first_token_s is not None])
+        occ = (self._active_slot_steps / (self._steps * self.num_slots)
+               if self._steps else 0.0)
+        return {
+            "requests": len(done),
+            "generated_tokens": gen,
+            "steps": self._steps,
+            "wall_s": dt,
+            "tok_per_s": gen / dt if dt > 0 else float("nan"),
+            "latency_s": lat,
+            "first_token_s": ftl,
+            "slot_occupancy": occ,
+            "weight_sparsity": self.weight_sparsity,
+            "head_compression": self.head_compression,
+            "cache_resets": self.kv.resets,
+        }

@@ -1,0 +1,49 @@
+"""Serving request state.
+
+A ``Request`` carries everything the engine needs across its lifetime:
+the prompt, the generation budget, the arrival offset (measured in decode
+steps so traces are deterministic regardless of host speed), and the
+timing marks the benchmark turns into latency percentiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional, Sequence
+
+
+class RequestState(enum.Enum):
+    WAITING = "waiting"     # submitted, not yet admitted to a slot
+    ACTIVE = "active"       # owns a batch slot, decoding
+    DONE = "done"           # generation budget exhausted, slot released
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: Sequence[int]
+    max_new_tokens: int
+    arrival: float = 0.0            # decode-step offset at which it arrives
+
+    # -- filled in by the engine --
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    slot: Optional[int] = None      # last slot owned (kept after release)
+    state: RequestState = RequestState.WAITING
+    admit_step: Optional[int] = None
+    done_step: Optional[int] = None
+    t_due: Optional[float] = None   # wall time the arrival offset was reached
+    t_first: Optional[float] = None  # wall time of the first generated token
+    t_done: Optional[float] = None   # wall time generation finished
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        """Queue + decode wall latency (arrival -> last token)."""
+        if self.t_due is None or self.t_done is None:
+            return None
+        return self.t_done - self.t_due
+
+    @property
+    def first_token_s(self) -> Optional[float]:
+        if self.t_due is None or self.t_first is None:
+            return None
+        return self.t_first - self.t_due

@@ -1,0 +1,41 @@
+"""Arrival traces for the serving benchmark.
+
+Arrival offsets are measured in *decode steps*, not wall seconds, so a
+trace schedules identically on any host — the scheduler's behaviour under
+load is deterministic and testable while wall-clock latencies are still
+measured for reporting.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+
+def poisson_trace(n_requests: int, rate: float, seed: int = 0,
+                  prompt_len: Tuple[int, int] = (1, 4),
+                  max_new: Tuple[int, int] = (8, 24),
+                  vocab_size: int = 256) -> List[dict]:
+    """Seeded Poisson arrival process: exponential inter-arrival gaps with
+    mean ``1/rate`` decode steps; prompts and budgets drawn uniformly."""
+    assert rate > 0
+    r = np.random.default_rng(seed)
+    t = 0.0
+    out = []
+    for _ in range(n_requests):
+        t += float(r.exponential(1.0 / rate))
+        plen = int(r.integers(prompt_len[0], prompt_len[1], endpoint=True))
+        out.append({
+            "prompt": [int(x) for x in r.integers(0, vocab_size, plen)],
+            "max_new_tokens": int(r.integers(max_new[0], max_new[1],
+                                             endpoint=True)),
+            "arrival": t,
+        })
+    return out
+
+
+def percentiles(values: Sequence[float], qs=(50, 99)) -> dict:
+    if not values:
+        return {f"p{q}": float("nan") for q in qs}
+    arr = np.asarray(values, np.float64)
+    return {f"p{q}": float(np.percentile(arr, q)) for q in qs}

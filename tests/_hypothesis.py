@@ -1,0 +1,146 @@
+"""Deterministic offline stand-in for the ``hypothesis`` subset used here.
+
+This container cannot pip-install anything, so when the real library is
+missing ``conftest.py`` installs this module as ``hypothesis`` (and
+``hypothesis.strategies``).  It implements exactly the API surface the
+property-test modules use:
+
+* ``@settings(max_examples=N, deadline=None)``
+* ``@given(strategy, ...)`` — runs the test body ``max_examples`` times
+  with draws from a per-test seeded ``numpy`` RNG (seed = CRC32 of the
+  test's qualified name, so example sequences are stable across runs
+  and machines);
+* ``strategies.integers / floats / booleans / lists / sampled_from``.
+
+Unlike real hypothesis there is no shrinking and no adaptive search —
+failures report the drawn example verbatim.  The point is that the
+paper-fidelity property tests *run* offline; with real hypothesis
+installed the shim is never imported.
+"""
+from __future__ import annotations
+
+import sys
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 100
+
+__version__ = "0.0-shim"
+
+
+class _Strategy:
+    """A strategy is just a draw function over a numpy Generator."""
+
+    def __init__(self, draw, repr_=""):
+        self._draw = draw
+        self._repr = repr_ or "strategy()"
+
+    def example(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+    def __repr__(self):
+        return self._repr
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(
+        lambda rng: int(rng.integers(min_value, max_value, endpoint=True)),
+        f"integers({min_value}, {max_value})")
+
+
+def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)),
+                     f"floats({min_value}, {max_value})")
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)), "booleans()")
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))],
+                     f"sampled_from({elements!r})")
+
+
+def lists(elements: _Strategy, min_size: int = 0,
+          max_size: int = 10) -> _Strategy:
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size, endpoint=True))
+        return [elements.example(rng) for _ in range(n)]
+    return _Strategy(draw, f"lists({elements!r}, {min_size}, {max_size})")
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_kw):
+    """Store the example budget on the (already ``given``-wrapped) test."""
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies, **kw_strategies):
+    """Run the test ``max_examples`` times with deterministic draws.
+
+    The wrapper takes *no* parameters so pytest does not try to resolve
+    the strategy-bound argument names as fixtures (real hypothesis
+    rewrites the signature the same way).
+    """
+    def deco(fn):
+        def runner():
+            n = getattr(runner, "_shim_max_examples", DEFAULT_MAX_EXAMPLES)
+            rng = np.random.default_rng(
+                zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                args = tuple(s.example(rng) for s in strategies)
+                kwargs = {k: s.example(rng)
+                          for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, **kwargs)
+                except _Unsatisfied:
+                    continue
+                except Exception as e:  # report the failing example
+                    raise AssertionError(
+                        f"{fn.__qualname__} failed on drawn example "
+                        f"args={args!r} kwargs={kwargs!r}: {e}") from e
+
+        runner.__name__ = fn.__name__
+        runner.__qualname__ = fn.__qualname__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        runner.hypothesis_shim = True
+        return runner
+    return deco
+
+
+def assume(condition) -> bool:
+    """Best-effort: a failed assumption just skips the rest via assert."""
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+class _StrategiesModule:
+    """Stands in for the ``hypothesis.strategies`` module."""
+
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    booleans = staticmethod(booleans)
+    lists = staticmethod(lists)
+    sampled_from = staticmethod(sampled_from)
+
+
+strategies = _StrategiesModule()
+
+
+def install():
+    """Register this module as ``hypothesis`` in ``sys.modules``."""
+    mod = sys.modules[__name__]
+    sys.modules.setdefault("hypothesis", mod)
+    sys.modules.setdefault("hypothesis.strategies", strategies)

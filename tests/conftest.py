@@ -1,8 +1,26 @@
 """Shared fixtures. NOTE: no XLA_FLAGS device forcing here — smoke tests
 and benches must see the real single CPU device; only the dry-run (and the
-subprocess-based SPMD tests) force 512/8 host devices."""
+subprocess-based SPMD tests) force 512/8 host devices.
+
+This conftest also installs the offline property-testing shim: the
+container has no ``hypothesis`` and cannot pip-install one, so when the
+import fails we register ``tests/_hypothesis.py`` (a deterministic
+``given``/``settings``/``strategies`` subset) under the same module names
+before the property-test modules are collected.  With real hypothesis
+installed the shim is never used.
+"""
+import pathlib
+import sys
+
 import numpy as np
 import pytest
+
+try:
+    import hypothesis  # noqa: F401  (real library wins when present)
+except ModuleNotFoundError:
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+    import _hypothesis
+    _hypothesis.install()
 
 
 @pytest.fixture

@@ -162,8 +162,9 @@ def test_hlo_counter_collectives():
         mesh = jax.make_mesh((8,), ("x",))
         def f(a):
             return jax.lax.psum(a, "x")
-        sf = jax.shard_map(f, mesh=mesh, in_specs=P("x", None),
-                           out_specs=P(None))
+        from repro.compat import shard_map
+        sf = shard_map(f, mesh=mesh, in_specs=P("x", None),
+                       out_specs=P(None))
         c = jax.jit(sf).lower(
             jax.ShapeDtypeStruct((8, 128), jnp.float32)).compile()
         r = analyze(c.as_text())

@@ -79,6 +79,40 @@ def test_flash_attention_sweep(hq, hkv, s, d, window, dtype):
                                atol=5e-2 if dtype == jnp.bfloat16 else 2e-3)
 
 
+@pytest.mark.parametrize("m,bm", [(4, 4), (8, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bitmap_spmm_serving_head_shape(m, bm, dtype):
+    """The serving engine's LM-head tile (BK != BN, tiny decode batch):
+    interpret-mode kernel == dense reference."""
+    r = np.random.default_rng(7)
+    k, n = 64, 256
+    w = r.standard_normal((k, n)).astype(np.float32)
+    w *= r.random((k, n)) >= 0.6
+    bw = pack_bitmap(w.astype(dtype), block=(64, 128))
+    x = jnp.asarray(r.standard_normal((m, k)), dtype)
+    out = bitmap_spmm(x, bw, bm=bm, interpret=True)
+    expect = ref.bitmap_spmm_ref(x, bw)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=_tol(dtype) * np.sqrt(k), rtol=1e-2)
+
+
+def test_hbm_traffic_model_shrinks_with_density():
+    """Sparse HBM bytes < dense, and monotonically shrinking as the
+    weight gets sparser (the paper's traffic-cut lever)."""
+    r = np.random.default_rng(1)
+    w0 = r.standard_normal((512, 512)).astype(np.float32)
+    keep = r.random((512, 512))
+    prev = None
+    for sparsity in (0.5, 0.75, 0.9):
+        bw = pack_bitmap(w0 * (keep >= sparsity), block=(128, 128))
+        t = hbm_traffic_model((256, 512), bw)
+        assert t["sparse_bytes"] < t["dense_bytes"]
+        if prev is not None:
+            assert t["sparse_bytes"] < prev
+        prev = t["sparse_bytes"]
+
+
 def test_hbm_traffic_model_reports_compression():
     r = np.random.default_rng(0)
     w = r.standard_normal((512, 512)).astype(np.float32)
