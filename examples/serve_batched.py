@@ -4,7 +4,9 @@ the jamba-style hybrid (attention + Mamba + MoE) smoke model.
 Six requests arrive over time into a 2-slot engine with 50 % pruned
 weights: the scheduler admits each into the first freed slot (no drain
 barrier), the slotted KV cache is zeroed and reused per admission, and
-the LM head streams in the paper's bitmap-compressed format every step.
+every packable projection (attention q/k/v/o here; Mamba/MoE tensors
+record dense fallbacks) plus the LM head streams in the paper's
+bitmap-compressed format every step.
 
 Run:  PYTHONPATH=src python examples/serve_batched.py
 """

@@ -12,4 +12,9 @@ echo "== serving smoke: continuous batching + bitmap-compressed head =="
 PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --smoke \
     --sparsity 0.5 --slots 2 --requests 6 --max-len 64
 
+echo "== bench smoke: whole-stack bitmap streaming -> BENCH_serve.json =="
+PYTHONPATH=src python benchmarks/bitmap_streaming.py --smoke \
+    --sparsities 0.0 0.75 --slots 2 --requests 8 --max-len 32 \
+    --out BENCH_serve.json
+
 echo "CI OK"

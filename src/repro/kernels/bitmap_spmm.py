@@ -61,21 +61,43 @@ def _kernel(x_ref, bits_ref, vals_ref, rows_ref, o_ref, acc_ref, *,
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _sublane(dtype) -> int:
+    """Minimum second-to-minor tile size for the dtype (f32: 8, bf16: 16)."""
+    return {2: 16, 1: 32}.get(jnp.dtype(dtype).itemsize, 8)
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
 @functools.partial(jax.jit, static_argnames=("bm", "interpret", "out_dtype"))
 def bitmap_spmm(x: jax.Array, w: BitmapWeight, *, bm: int = 128,
                 interpret: bool = True, out_dtype=None) -> jax.Array:
     """Compute ``x @ W`` with W stored bitmap-compressed.
 
     x: (M, K); W logical shape (K, N).  Returns (M, N).
+
+    Decode-shaped small-M path: any M in 1..bm (and any M not a multiple
+    of ``bm``) is accepted — the row tile shrinks to M rounded up to the
+    dtype's sublane multiple, the handful of zero pad rows accumulate
+    zeros and their stores are sliced away, instead of the old behaviour
+    of requiring the caller to pad a 4-row decode batch 32× up to 128.
     """
     m, k = x.shape
     kk, n = w.shape
     assert k == kk, (x.shape, w.shape)
     bk, bn = w.block
     kt, nt = k // bk, n // bn
-    assert m % bm == 0, (m, bm)
     out_dtype = out_dtype or x.dtype
     budget = w.budget
+
+    if m % bm != 0:
+        bm = min(bm, _round_up(m, _sublane(x.dtype)))
+        m_pad = _round_up(m, bm)
+        if m_pad != m:
+            xp = jnp.pad(x, ((0, m_pad - m), (0, 0)))
+            return bitmap_spmm(xp, w, bm=bm, interpret=interpret,
+                               out_dtype=out_dtype)[:m]
 
     grid = (m // bm, nt, kt)
     kernel = functools.partial(_kernel, bk=bk, bn=bn, budget=budget, n_k=kt)
@@ -105,11 +127,15 @@ def hbm_traffic_model(x_shape: Tuple[int, int], w: BitmapWeight,
     Activations are re-fetched once per output-column block (grid reuse
     pattern above); weights once per output-row block; outputs written once.
     Used by the roofline adjustment in benchmarks/roofline.py.
+
+    Decode shapes (M < bm) follow the kernel's small-M path: one row
+    block (mt = 1), so the whole compressed weight streams exactly once
+    per step — the regime where the bitmap format pays off most.
     """
     m, k = x_shape
     _, n = w.shape
     nt = n // w.block[1]
-    mt = m // bm
+    mt = max(1, -(-m // bm))
     x_bytes = m * k * itemsize * nt
     out_bytes = m * n * itemsize
     w_sparse = w.hbm_bytes * mt

@@ -26,11 +26,20 @@ def default_impl() -> str:
 
 def bitmap_spmm(x: jax.Array, w: BitmapWeight, impl: str | None = None,
                 **kw) -> jax.Array:
+    """``x @ W`` with W bitmap-compressed; x may be (..., K) — leading
+    dims are flattened into the kernel's row dimension (the Pallas path's
+    small-M variant handles decode batches without padding to 128)."""
     impl = impl or default_impl()
+    lead = x.shape[:-1]
+    if x.ndim != 2:
+        x = x.reshape(-1, x.shape[-1])
     if impl == "xla":
-        return _ref.bitmap_spmm_ref(x, w)
-    return _bitmap_spmm_pallas(x, w, interpret=(impl == "pallas_interpret"),
-                               **kw)
+        out = _ref.bitmap_spmm_ref(x, w)
+    else:
+        out = _bitmap_spmm_pallas(x, w,
+                                  interpret=(impl == "pallas_interpret"),
+                                  **kw)
+    return out.reshape(lead + (w.shape[1],)) if len(lead) != 1 else out
 
 
 def block_sparse_matmul(x: jax.Array, w: BlockSparseWeight,

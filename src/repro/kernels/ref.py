@@ -9,7 +9,16 @@ from repro.sparse.format import (BitmapWeight, BlockSparseWeight,
 
 
 def bitmap_spmm_ref(x: jax.Array, w: BitmapWeight) -> jax.Array:
-    dense = unpack_bitmap(w).astype(x.dtype)
+    """Oracle for ``bitmap_spmm``; also the serve-time xla dispatch.
+
+    When the weight carries a pack-time ``dense_cache`` the EIM re-sort
+    is skipped — decompression is a pack-time cost on backends without
+    the Pallas kernel (see ``BitmapWeight``); without it the full
+    software decompression runs, which is what the kernel parity tests
+    exercise.
+    """
+    dense = (w.dense_cache if w.dense_cache is not None
+             else unpack_bitmap(w)).astype(x.dtype)
     return jnp.dot(x, dense, preferred_element_type=jnp.float32).astype(
         x.dtype)
 

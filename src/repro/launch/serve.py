@@ -26,13 +26,13 @@ def serve(arch: str, smoke: bool = True, batch: int = 4, steps: int = 32,
     each decoding ``steps`` tokens — the old serve() contract, now routed
     through the engine (returns the (batch, steps) greedy token matrix).
 
-    ``head_sparsity=0.0`` keeps the old contract's *numerics*: the LM
-    head streams through the bitmap path but unpruned, so for
-    token-frontend archs the greedy tokens match the pre-engine
-    straight-line loop (which served a dense head) exactly.  Frames-
-    frontend archs (musicgen) draw their per-step embeds from the
-    engine's RNG stream, which is offset by the warmup draw — same
-    distribution, different sequence than the old loop.
+    ``head_sparsity=0.0`` keeps the old contract's *numerics*: the whole
+    stack (and the head) streams through the bitmap path but packing is
+    lossless, so for token-frontend archs the greedy tokens match the
+    pre-engine straight-line loop (which served dense) exactly.  Frames-
+    frontend archs (musicgen) derive their per-step embeds from a jax
+    PRNG key folded with the step counter — same distribution, different
+    sequence than the old host-RNG loop.
     """
     eng = ServeEngine.from_arch(arch, smoke=smoke, num_slots=batch,
                                 max_len=max_len, sparsity=sparsity,
@@ -58,17 +58,24 @@ def serve_trace(arch: str, smoke: bool = True, slots: int = 4,
                 requests: int = 8, rate: float = 0.5, max_len: int = 128,
                 max_new: tuple = (8, 24), sparsity: float = 0.0,
                 head_sparsity: float | None = None, seed: int = 0,
-                model_parallel: int = 1, verbose: bool = True) -> dict:
+                model_parallel: int = 1, stream_weights: bool = True,
+                temperature: float = 0.0, top_k: int = 0,
+                verbose: bool = True) -> dict:
     """Continuous-batching mode: seeded Poisson arrivals into the engine.
 
     ``head_sparsity`` defaults to ``sparsity`` (the serving regime: the
     LM head is per-tensor pruned before bitmap packing); pass 0.0 to
-    stream the exact dense head.
+    stream the exact dense head.  ``stream_weights=False`` serves a
+    fully dense-dispatch baseline (no stack streaming, dense head).
+    ``temperature`` > 0 samples every request at that temperature
+    (top-``top_k`` truncated) with per-request seeds; default greedy.
     """
     eng = ServeEngine.from_arch(arch, smoke=smoke, num_slots=slots,
                                 max_len=max_len, sparsity=sparsity,
                                 head_sparsity=head_sparsity,
-                                seed=seed, model_parallel=model_parallel)
+                                seed=seed, model_parallel=model_parallel,
+                                stream_weights=stream_weights,
+                                bitmap_head=stream_weights, top_k=top_k)
     prompt_len = (1, min(4, max_len))
     hi = max(1, min(max_new[1], max_len - prompt_len[1] + 1))
     lo = max(1, min(max_new[0], hi))
@@ -77,9 +84,17 @@ def serve_trace(arch: str, smoke: bool = True, slots: int = 4,
                           prompt_len=prompt_len, max_new=(lo, hi))
     with eng.mesh:
         for spec in trace:
-            eng.submit(**spec)
+            eng.submit(**spec, temperature=temperature)
         rep = eng.run()
     if verbose:
+        ws = rep["weight_stream"]
+        print(f"weight stream: {ws['packed_tensors']} tensors packed, "
+              f"{ws['fallback_tensors']} dense fallbacks | modeled "
+              f"per-step weight HBM {ws['sparse_bytes_per_step']/1e6:.2f}MB"
+              f" vs dense {ws['dense_bytes_per_step']/1e6:.2f}MB "
+              f"({ws['reduction']:.2f}x)")
+        if rep["head_fallback"]:
+            print(f"  head fallback: {rep['head_fallback']}")
         if sparsity > 0:
             print(f"serving at {eng.weight_sparsity:.2%} weight sparsity "
                   f"(head compression {eng.head_compression:.2f}x)")
@@ -107,6 +122,13 @@ def main():
     ap.add_argument("--head-sparsity", type=float, default=None,
                     help="LM-head prune level before bitmap packing "
                          "(default: --sparsity; 0 = exact dense head)")
+    ap.add_argument("--dense-stack", action="store_true",
+                    help="disable all bitmap weight streaming (stack and "
+                         "head): a fully dense-dispatch baseline")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k truncation for sampled requests (0 = off)")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -114,6 +136,8 @@ def main():
                 requests=args.requests, rate=args.rate,
                 max_len=args.max_len, sparsity=args.sparsity,
                 head_sparsity=args.head_sparsity,
+                stream_weights=not args.dense_stack,
+                temperature=args.temperature, top_k=args.top_k,
                 seed=args.seed, model_parallel=args.model_parallel)
 
 

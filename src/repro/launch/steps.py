@@ -97,23 +97,54 @@ def build_prefill_step(cfg: ModelConfig) -> Callable:
     return prefill_step
 
 
-def build_serve_step(cfg: ModelConfig, impl: Optional[str] = None
-                     ) -> Callable:
-    """One decode step + greedy head: (params, cache, tokens/embeds, pos)
+def build_serve_step(cfg: ModelConfig, impl: Optional[str] = None,
+                     top_k: int = 0) -> Callable:
+    """One decode step + head: (params, cache, tokens/embeds, pos)
     -> (next_token, logits, new_cache).
 
     ``pos`` may be a scalar (classic lock-step decode) or a (B,) vector of
     per-slot positions (continuous batching).  ``lm_weight`` (a
     ``BitmapWeight``) routes the LM head through the bitmap-compressed
-    ``kernels/ops.bitmap_spmm`` path; ``impl`` pins the kernel dispatch
+    ``kernels/ops.bitmap_spmm`` path and ``packed`` (the block tree from
+    ``repro.serve.packed.pack_model``) does the same for every attention
+    and MLP projection; ``impl`` pins the kernel dispatch
     ("xla" | "pallas" | "pallas_interpret", default backend-chosen).
+
+    ``embed_rng`` (frames frontend): a PRNG key the step derives the
+    per-step frame embeddings from on device — no host round-trip in the
+    decode loop.
+
+    Sampling: with ``sample_keys`` ((B, 2) uint32, one key per slot) and
+    ``temperature`` ((B,) f32) the head samples from
+    ``softmax(logits / T)`` (top-``top_k`` truncated when ``top_k`` > 0);
+    slots with T == 0 stay exactly greedy, so the default is unchanged.
+    Keys are folded with the slot position, so a request's sample at
+    position p depends only on (its seed, p) — deterministic under
+    continuous batching regardless of scheduling.
     """
 
-    def serve_step(params, cache, tokens, pos, embeds=None, lm_weight=None):
+    def serve_step(params, cache, tokens, pos, embeds=None, lm_weight=None,
+                   packed=None, embed_rng=None, sample_keys=None,
+                   temperature=None):
+        if embed_rng is not None and embeds is None:
+            b = pos.shape[0] if jnp.ndim(pos) else 1
+            embeds = jax.random.normal(embed_rng, (b, 1, cfg.d_model),
+                                       jnp.float32)
         logits, new_cache = decode_step(params, cache, cfg, tokens, pos,
                                         embeds=embeds, lm_weight=lm_weight,
-                                        lm_impl=impl)
+                                        packed=packed, lm_impl=impl)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if sample_keys is not None and temperature is not None:
+            posv = jnp.broadcast_to(pos, next_tok.shape)
+            keys = jax.vmap(jax.random.fold_in)(sample_keys, posv)
+            scaled = logits.astype(jnp.float32) / jnp.maximum(
+                temperature, 1e-6)[:, None]
+            if top_k > 0:
+                kth = jax.lax.top_k(scaled, top_k)[0][:, -1:]
+                scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+            sampled = jax.vmap(jax.random.categorical)(keys, scaled)
+            next_tok = jnp.where(temperature > 0,
+                                 sampled.astype(jnp.int32), next_tok)
         return next_tok, logits, new_cache
 
     return serve_step

@@ -317,11 +317,28 @@ def moe_ffn(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
     return out.astype(x.dtype)
 
 
-def mlp(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
-    w_dtype = x.dtype
+def matmul_or_bitmap(h: jax.Array, w: jax.Array, bw, impl) -> jax.Array:
+    """One projection: dense ``h @ w`` unless a packed ``BitmapWeight`` is
+    provided, in which case the matmul streams the compressed form through
+    ``kernels/ops.bitmap_spmm`` (xla ref on CPU, Pallas on TPU) — packing
+    is lossless, so the two paths are numerically identical."""
+    if bw is None:
+        return h @ w.astype(h.dtype)
+    from repro.kernels import ops  # lazy: layers must not import kernels
+    return ops.bitmap_spmm(h, bw, impl=impl)
+
+
+def mlp(params: dict, x: jax.Array, cfg: ModelConfig,
+        packed: Optional[dict] = None, impl: Optional[str] = None
+        ) -> jax.Array:
+    """Gated/plain MLP; ``packed`` maps weight names to ``BitmapWeight``s
+    (serve-time compressed streaming — see repro.serve.packed)."""
+    pk = packed or {}
     if "w_gate" in params:
-        h = activation(x @ params["w_gate"].astype(w_dtype), cfg.act)
-        h = h * (x @ params["w_up"].astype(w_dtype))
+        h = activation(matmul_or_bitmap(x, params["w_gate"],
+                                        pk.get("w_gate"), impl), cfg.act)
+        h = h * matmul_or_bitmap(x, params["w_up"], pk.get("w_up"), impl)
     else:
-        h = activation(x @ params["w_up"].astype(w_dtype), cfg.act)
-    return h @ params["w_down"].astype(w_dtype)
+        h = activation(matmul_or_bitmap(x, params["w_up"],
+                                        pk.get("w_up"), impl), cfg.act)
+    return matmul_or_bitmap(h, params["w_down"], pk.get("w_down"), impl)

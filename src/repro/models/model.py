@@ -350,15 +350,21 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
 
 
 def _decode_attn(p: Dict, x: jax.Array, cache: Dict, cfg: ModelConfig,
-                 blk: BlockCfg, pos: jax.Array) -> Tuple[jax.Array, Dict]:
+                 blk: BlockCfg, pos: jax.Array, packed: Optional[Dict] = None,
+                 impl: Optional[str] = None) -> Tuple[jax.Array, Dict]:
+    """``packed`` maps projection names (wq/wk/wv/wo) to ``BitmapWeight``s;
+    present entries stream compressed through kernels/ops (serve time)."""
     b, _, d = x.shape
     hd = cfg.resolved_head_dim
     h, kv = cfg.num_heads, cfg.num_kv_heads
-    dt_ = x.dtype
+    pk = packed or {}
     xn = L.norm(x, p.get("norm"), cfg.norm)
-    q = (xn @ p["wq"].astype(dt_)).reshape(b, 1, h, hd)
-    k = (xn @ p["wk"].astype(dt_)).reshape(b, 1, kv, hd)
-    v = (xn @ p["wv"].astype(dt_)).reshape(b, 1, kv, hd)
+    q = L.matmul_or_bitmap(xn, p["wq"], pk.get("wq"), impl).reshape(
+        b, 1, h, hd)
+    k = L.matmul_or_bitmap(xn, p["wk"], pk.get("wk"), impl).reshape(
+        b, 1, kv, hd)
+    v = L.matmul_or_bitmap(xn, p["wv"], pk.get("wv"), impl).reshape(
+        b, 1, kv, hd)
     if cfg.qk_norm:
         q = L.norm(q, p["q_norm"], "rmsnorm")
         k = L.norm(k, p["k_norm"], "rmsnorm")
@@ -386,14 +392,16 @@ def _decode_attn(p: Dict, x: jax.Array, cache: Dict, cfg: ModelConfig,
             v[:, 0].astype(cache["v"].dtype))
     o = L.decode_attention(q, k_cache, v_cache, pos, window=blk.window,
                            ring=ring)
-    out = o.reshape(b, 1, h * hd) @ p["wo"].astype(dt_)
+    out = L.matmul_or_bitmap(o.reshape(b, 1, h * hd), p["wo"],
+                             pk.get("wo"), impl)
     return out, {"k": k_cache, "v": v_cache}
 
 
 def decode_hidden(params: Dict, cache: Dict, cfg: ModelConfig,
                   tokens: Optional[jax.Array], pos: jax.Array,
-                  embeds: Optional[jax.Array] = None
-                  ) -> Tuple[jax.Array, Dict]:
+                  embeds: Optional[jax.Array] = None,
+                  packed: Optional[Dict] = None,
+                  impl: Optional[str] = None) -> Tuple[jax.Array, Dict]:
     """One decode step up to (and including) the final norm — no LM head.
 
     tokens: (B, 1) (or embeds (B, 1, D)); pos: scalar shared position or a
@@ -401,19 +409,26 @@ def decode_hidden(params: Dict, cache: Dict, cfg: ModelConfig,
     (hidden (B, 1, D), new cache).  Scans over periods, carrying the
     hidden state and threading each period's cache slice through as
     scan xs/ys.
+
+    ``packed`` mirrors ``params["blocks"]`` with period-stacked
+    ``BitmapWeight`` leaves (or None where a tensor fell back to dense —
+    see repro.serve.packed); the scan slices off the period axis so each
+    iteration's projections stream bitmap-compressed through kernels/ops.
     """
     x = embed_inputs(params, cfg, tokens, embeds)
     b = x.shape[0]
 
     def period_fn(x, xs):
-        period_params, period_cache = xs
+        period_params, period_cache, period_packed = xs
         new_cache = {}
         for i, blk in enumerate(cfg.pattern):
             bp = period_params[f"b{i}"]
             pc = period_cache[f"b{i}"]
+            pw = (period_packed or {}).get(f"b{i}") or {}
             nc = {}
             if blk.mixer == "attn":
-                o, nc = _decode_attn(bp["attn"], x, pc, cfg, blk, pos)
+                o, nc = _decode_attn(bp["attn"], x, pc, cfg, blk, pos,
+                                     packed=pw.get("attn"), impl=impl)
                 x = x + o
             elif blk.mixer == "mamba":
                 xn = L.norm(x, bp["mamba"].get("norm"), cfg.norm)
@@ -431,7 +446,8 @@ def decode_hidden(params: Dict, cache: Dict, cfg: ModelConfig,
                 nc = st
             if blk.ffn == "mlp":
                 xn = L.norm(x, bp["mlp"].get("norm"), cfg.norm)
-                x = x + L.mlp(bp["mlp"], xn, cfg)
+                x = x + L.mlp(bp["mlp"], xn, cfg, packed=pw.get("mlp"),
+                              impl=impl)
             elif blk.ffn == "moe":
                 xn = L.norm(x, bp["moe"].get("norm"), cfg.norm)
                 x = x + L.moe_ffn(bp["moe"], xn, cfg)
@@ -443,7 +459,8 @@ def decode_hidden(params: Dict, cache: Dict, cfg: ModelConfig,
             new_cache[f"b{i}"] = nc
         return x, new_cache
 
-    x, new_cache = jax.lax.scan(period_fn, x, (params["blocks"], cache))
+    x, new_cache = jax.lax.scan(period_fn, x,
+                                (params["blocks"], cache, packed))
     return L.norm(x, params.get("final_norm"), cfg.norm), new_cache
 
 
@@ -461,12 +478,10 @@ def head_logits(params: Dict, cfg: ModelConfig, hidden: jax.Array,
         logits = (hidden @ w).astype(jnp.float32)
     else:
         from repro.kernels import ops
-        # decode batches are far below the kernel's default 128-row tile;
-        # the M grid must divide the batch exactly
-        m = hidden.shape[0]
-        logits = ops.bitmap_spmm(hidden, lm_weight, impl=lm_impl,
-                                 bm=(128 if m % 128 == 0 else m)
-                                 ).astype(jnp.float32)
+        # the kernel's small-M path handles decode batches below the
+        # 128-row tile (rows round up to the sublane multiple, not 128)
+        logits = ops.bitmap_spmm(hidden, lm_weight,
+                                 impl=lm_impl).astype(jnp.float32)
     from repro.models.perf_flags import baseline_mode
     if not baseline_mode():
         # §Perf: keep decode logits vocab-sharded — otherwise GSPMD
@@ -481,8 +496,15 @@ def head_logits(params: Dict, cfg: ModelConfig, hidden: jax.Array,
 def decode_step(params: Dict, cache: Dict, cfg: ModelConfig,
                 tokens: Optional[jax.Array], pos: jax.Array,
                 embeds: Optional[jax.Array] = None, lm_weight=None,
+                packed: Optional[Dict] = None,
                 lm_impl: Optional[str] = None) -> Tuple[jax.Array, Dict]:
-    """One decode step + LM head: (logits (B, V), new cache)."""
+    """One decode step + LM head: (logits (B, V), new cache).
+
+    ``packed`` (block-tree of period-stacked ``BitmapWeight``s) and
+    ``lm_weight`` together put the whole per-step weight stream —
+    attention q/k/v/o, MLP gate/up/down, LM head — on the
+    bitmap-compressed kernels/ops path.
+    """
     x, new_cache = decode_hidden(params, cache, cfg, tokens, pos,
-                                 embeds=embeds)
+                                 embeds=embeds, packed=packed, impl=lm_impl)
     return head_logits(params, cfg, x[:, 0], lm_weight, lm_impl), new_cache

@@ -10,10 +10,13 @@ system:
   width under a stream of arrivals (``repro.serve.scheduler``);
 * a slotted KV-cache manager that reuses one donated ``init_cache``
   allocation across request lifetimes (``repro.serve.cache``);
-* weights pruned once (``global_l1_prune``) and the LM head packed once
-  into the paper's ``BitmapWeight`` format, dispatched through
-  ``kernels/ops.bitmap_spmm`` every step — the bitmap-compressed HBM
-  path runs end-to-end at serve time.
+* weights pruned once (``global_l1_prune``) and the *whole serve-time
+  stack* packed once into the paper's ``BitmapWeight`` format
+  (``repro.serve.packed.pack_model``): attention q/k/v/o, MLP
+  gate/up/down and the LM head all dispatch through
+  ``kernels/ops.bitmap_spmm`` every decode step — the bitmap-compressed
+  HBM path runs end-to-end at serve time, and the per-tensor manifest
+  records what packed vs fell back (and why).
 
 Positions are per-slot: the decode step takes a (B,) position vector so
 each slot advances through its own sequence independently (the models
@@ -23,6 +26,7 @@ from __future__ import annotations
 
 import math
 import time
+import warnings
 from typing import List, Optional, Sequence, Tuple
 
 import jax
@@ -36,6 +40,7 @@ from repro.launch.steps import build_serve_step
 from repro.models.config import ModelConfig
 from repro.models.model import init_params, lm_head_weight
 from repro.serve.cache import SlotKVCache
+from repro.serve.packed import PackedModel, choose_block, pack_model
 from repro.serve.request import Request, RequestState
 from repro.serve.scheduler import SlotScheduler
 from repro.serve.trace import percentiles
@@ -47,17 +52,11 @@ from repro.sparse.pruning import global_l1_prune, per_tensor_prune, \
 def _head_block(d_model: int, vocab: int,
                 cap: int = 128) -> Optional[Tuple[int, int]]:
     """Largest (BK, BN) bitmap tile that divides the head; BN % 8 == 0."""
-    bk = next((d for d in range(min(d_model, cap), 0, -1)
-               if d_model % d == 0), None)
-    bn = next((d for d in range(min(vocab, cap), 0, -1)
-               if vocab % d == 0 and d % 8 == 0), None)
-    if bk is None or bn is None:
-        return None
-    return bk, bn
+    return choose_block(d_model, vocab, cap)
 
 
-def pack_lm_head(params, cfg: ModelConfig, sparsity: float = 0.0
-                 ) -> Optional[BitmapWeight]:
+def pack_lm_head(params, cfg: ModelConfig, sparsity: float = 0.0,
+                 cache_dense: bool = False) -> Optional[BitmapWeight]:
     """Prune (per-tensor) + pack the (D, V) LM head once for serving."""
     block = _head_block(cfg.d_model, cfg.vocab_size)
     if block is None:
@@ -65,7 +64,8 @@ def pack_lm_head(params, cfg: ModelConfig, sparsity: float = 0.0
     w = lm_head_weight(params, cfg)
     if sparsity > 0:
         w = per_tensor_prune(w, sparsity)
-    return pack_bitmap(np.asarray(w.astype(jnp.float32)), block=block)
+    return pack_bitmap(np.asarray(w.astype(jnp.float32)), block=block,
+                       cache_dense=cache_dense)
 
 
 class ServeEngine:
@@ -75,14 +75,25 @@ class ServeEngine:
                  max_len: int = 128, sparsity: float = 0.0, seed: int = 0,
                  model_parallel: int = 1, impl: Optional[str] = None,
                  bitmap_head: bool = True,
-                 head_sparsity: Optional[float] = None):
+                 head_sparsity: Optional[float] = None,
+                 stream_weights: bool = True, top_k: int = 0):
         """``head_sparsity``: ``global_l1_prune`` deliberately keeps
         (tied) embeddings dense, so the LM head is additionally pruned
         per-tensor to this level before packing — that is what gives the
         bitmap head its compression at serve time.  Defaults to
         ``sparsity``; pass 0.0 to stream the exact dense head through the
         bitmap path instead (compression < 1, numerics identical to the
-        dense head)."""
+        dense head).
+
+        ``stream_weights``: pack the whole decode stack (attention
+        q/k/v/o + MLP gate/up/down) once via ``pack_model`` and stream it
+        bitmap-compressed every step.  Packing is lossless, so tokens are
+        identical to dense dispatch at any sparsity; pass False for a
+        dense-dispatch baseline.
+
+        ``top_k``: static top-k truncation for sampled requests (0 = no
+        truncation; per-request ``temperature``/``seed`` live on
+        ``submit``, greedy default unchanged)."""
         self.cfg = cfg
         self.num_slots = num_slots
         self.max_len = max_len
@@ -97,22 +108,70 @@ class ServeEngine:
         self.params = jax.device_put(params, pspecs)
 
         # pack once, cache on the engine: every decode step streams the
-        # head through the bitmap-compressed kernels/ops path
+        # stack + head through the bitmap-compressed kernels/ops path.
+        # On the xla (non-TPU) dispatch the pack also renders the dense
+        # oracle view, so serving pays no per-step software decompression.
+        from repro.kernels.ops import default_impl
+        cache_dense = (impl or default_impl()) == "xla"
+        self.stream_fallback: Optional[str] = None
+        mp_actual = int(self.mesh.shape.get("model", 1))
+        if stream_weights and mp_actual > 1:
+            # packed leaves are host-built (values are packed along
+            # flattened tile dims, so the dense param_specs don't apply);
+            # GSPMD would replicate the whole compressed stack per device,
+            # regressing the sharded dense path's per-device memory —
+            # fall back to dense dispatch until the packed format grows a
+            # sharded layout
+            stream_weights = False
+            self.stream_fallback = (
+                f"model_parallel={mp_actual}: no sharded layout for "
+                f"packed weights yet; stack served dense")
+            warnings.warn(f"whole-stack bitmap streaming fell back to "
+                          f"dense: {self.stream_fallback}", stacklevel=2)
+        elif not stream_weights:
+            self.stream_fallback = "stream_weights=False"
+        self.packed: Optional[PackedModel] = (
+            pack_model(self.params, cache_dense=cache_dense)
+            if stream_weights else None)
         self.head_sparsity = (sparsity if head_sparsity is None
                               else head_sparsity)
-        self.lm_weight = (pack_lm_head(self.params, cfg, self.head_sparsity)
-                          if bitmap_head else None)
+        self.head_fallback: Optional[str] = None
+        if bitmap_head:
+            self.lm_weight = pack_lm_head(self.params, cfg,
+                                          self.head_sparsity,
+                                          cache_dense=cache_dense)
+            if self.lm_weight is None:
+                self.head_fallback = (
+                    f"no (BK, BN) tile divides (d_model={cfg.d_model}, "
+                    f"vocab={cfg.vocab_size}) with BN % 8 == 0; "
+                    f"head served dense")
+                warnings.warn(f"bitmap LM head fell back to dense: "
+                              f"{self.head_fallback}", stacklevel=2)
+        else:
+            self.lm_weight = None
+            self.head_fallback = "disabled (bitmap_head=False)"
         self.head_compression = (self.lm_weight.compression
                                  if self.lm_weight is not None else 1.0)
 
         self.scheduler = SlotScheduler(num_slots)
         self.kv = SlotKVCache(cfg, num_slots, max_len)
-        step_fn = build_serve_step(cfg, impl=impl)
+        step_fn = build_serve_step(cfg, impl=impl, top_k=top_k)
         self._jit_step = jax.jit(step_fn, donate_argnums=(1,))
 
-        self._rng = np.random.default_rng(seed)
         self._tok = np.zeros(num_slots, np.int32)
         self._pos = np.zeros(num_slots, np.int32)
+        # frames frontend: per-step embeddings come from a jax PRNG key
+        # folded with the step counter *inside* the jitted step — the old
+        # host-side standard_normal forced a host sync every decode step
+        self._embed_key = jax.random.PRNGKey(seed + 0x5eed)
+        # per-slot sampling state (greedy slots keep temperature 0).
+        # _use_sampling stays False until some request asks for T > 0, so
+        # all-greedy serving never pays the categorical/top-k machinery
+        # (flipping it later costs one extra jit signature compile).
+        self._use_sampling = False
+        self._temp = np.zeros(num_slots, np.float32)
+        self._keys = np.zeros((num_slots, 2), np.uint32)
+        self._seed = seed
         self._warm = False
         self._steps = 0
         self._active_slot_steps = 0     # occupancy accounting
@@ -128,14 +187,21 @@ class ServeEngine:
     # ------------------------------------------------------------ intake ----
 
     def submit(self, prompt: Sequence[int], max_new_tokens: int,
-               arrival: float = 0.0) -> Request:
+               arrival: float = 0.0, temperature: float = 0.0,
+               seed: Optional[int] = None) -> Request:
+        """``temperature`` > 0 samples this request's tokens (top-k per
+        the engine's static ``top_k``) with its own PRNG stream, seeded
+        by ``seed`` (default: engine seed + rid); 0 stays greedy."""
         prompt = [int(t) for t in prompt]
         assert prompt, "empty prompt"
         assert len(prompt) + max_new_tokens - 1 <= self.max_len, (
             f"prompt {len(prompt)} + {max_new_tokens} new tokens exceeds "
             f"max_len {self.max_len}")
         req = Request(rid=self._next_rid, prompt=prompt,
-                      max_new_tokens=max_new_tokens, arrival=arrival)
+                      max_new_tokens=max_new_tokens, arrival=arrival,
+                      temperature=temperature, seed=seed)
+        if temperature > 0:
+            self._use_sampling = True
         self._next_rid += 1
         self.requests.append(req)
         self.scheduler.submit(req)
@@ -147,26 +213,39 @@ class ServeEngine:
         return time.perf_counter() - self._t0
 
     def _decode(self, tok: jnp.ndarray, pos: jnp.ndarray):
+        packed = self.packed.blocks if self.packed is not None else None
+        kw = dict(lm_weight=self.lm_weight, packed=packed)
+        if self._use_sampling:
+            kw.update(sample_keys=jnp.asarray(self._keys),
+                      temperature=jnp.asarray(self._temp))
         if self.cfg.frontend == "frames":
-            emb = jnp.asarray(self._rng.standard_normal(
-                (self.num_slots, 1, self.cfg.d_model)), jnp.float32)
+            # device-side frame embeddings: fold the step counter into a
+            # carried key — no host RNG (and no host sync) in the hot loop
+            ekey = jax.random.fold_in(self._embed_key, self._steps)
             return self._jit_step(self.params, self.kv.cache, None, pos,
-                                  embeds=emb, lm_weight=self.lm_weight)
-        return self._jit_step(self.params, self.kv.cache, tok, pos,
-                              lm_weight=self.lm_weight)
+                                  embed_rng=ekey, **kw)
+        return self._jit_step(self.params, self.kv.cache, tok, pos, **kw)
 
     def warmup(self) -> None:
         """Compile the decode step + slot reset before the latency clock
         starts — otherwise the first request's percentiles measure XLA
         compile time, not serving.  Slots are all idle here; whatever the
-        throwaway step writes at position 0 is zeroed again on admission.
+        throwaway steps write at position 0 is zeroed again on admission.
+
+        Two throwaway decodes, not one: the first consumes the freshly
+        allocated (uncommitted) cache, but its *output* cache carries the
+        mesh's NamedSharding, which is a different jit signature — a
+        single-step warmup left the steady-state executable to compile
+        inside the first timed step (≈0.8 s mid-run for the packed
+        stack).  The second call compiles the steady-state signature.
         """
         if self._warm:
             return
-        nxt, _, cache = self._decode(jnp.asarray(self._tok[:, None]),
-                                     jnp.asarray(self._pos))
+        for _ in range(2):
+            nxt, _, cache = self._decode(jnp.asarray(self._tok[:, None]),
+                                         jnp.asarray(self._pos))
+            self.kv.cache = cache
         jax.block_until_ready(nxt)
-        self.kv.cache = cache
         self.kv.warmup()
         self._warm = True
 
@@ -183,6 +262,10 @@ class ServeEngine:
             self.kv.reset_slot(slot)
             self._pos[slot] = 0
             self._tok[slot] = req.prompt[0]
+            self._temp[slot] = req.temperature
+            rseed = req.seed if req.seed is not None \
+                else self._seed + 0x9e37 * (req.rid + 1)
+            self._keys[slot] = np.asarray(jax.random.PRNGKey(rseed))
             req.admit_step = self._steps
             if req.t_due is None:
                 req.t_due = self._wall()
@@ -212,6 +295,7 @@ class ServeEngine:
                 req.done_step = self._steps
                 self.scheduler.release(slot)
                 self._pos[slot] = 0
+                self._temp[slot] = 0.0     # freed slots decode greedy
         self._steps += 1
 
     def run(self) -> dict:
@@ -229,6 +313,36 @@ class ServeEngine:
         return self.report()
 
     # ---------------------------------------------------------- reports ----
+
+    def weight_stream_report(self) -> dict:
+        """Modeled per-step weight-HBM bytes, sparse vs dense, aggregated
+        across the whole decode stack (blocks + LM head).
+
+        Embeddings are excluded: the token lookup gathers B rows, it does
+        not stream the table.  The head term is the packed head's bitmap
+        bytes, or its dense bytes when the head fell back.
+        """
+        head_dense = (self.cfg.d_model * self.cfg.vocab_size
+                      * np.dtype(np.float32).itemsize)
+        head_sparse = (self.lm_weight.hbm_bytes
+                       if self.lm_weight is not None else head_dense)
+        if self.packed is not None:
+            rep = self.packed.stream_report()
+        else:
+            dense = sum(
+                int(np.prod(l.shape)) * l.dtype.itemsize
+                for l in jax.tree_util.tree_leaves(self.params["blocks"]))
+            rep = {"sparse_bytes_per_step": dense,
+                   "dense_bytes_per_step": dense, "reduction": 1.0,
+                   "packed_tensors": 0, "fallback_tensors": 0,
+                   "fallbacks": {"*": self.stream_fallback
+                                 or "stream_weights=False"}}
+        sparse = rep["sparse_bytes_per_step"] + head_sparse
+        dense = rep["dense_bytes_per_step"] + head_dense
+        return {**rep,
+                "sparse_bytes_per_step": sparse,
+                "dense_bytes_per_step": dense,
+                "reduction": dense / sparse if sparse else 1.0}
 
     def report(self) -> dict:
         done = [r for r in self.requests if r.state == RequestState.DONE]
@@ -251,5 +365,7 @@ class ServeEngine:
             "slot_occupancy": occ,
             "weight_sparsity": self.weight_sparsity,
             "head_compression": self.head_compression,
+            "head_fallback": self.head_fallback,
+            "weight_stream": self.weight_stream_report(),
             "cache_resets": self.kv.resets,
         }

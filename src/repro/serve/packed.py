@@ -1,0 +1,149 @@
+"""Whole-stack packed-model subsystem: prune once, pack once, stream
+bitmap-compressed on every decode step.
+
+``pack_model`` walks the params tree (the ``param_shapes`` inventory,
+stacked over periods) and, for every serve-time
+projection with a compressed dispatch path — attention ``wq/wk/wv/wo``
+and MLP ``w_gate/w_up/w_down`` — selects the largest valid ``(BK, BN)``
+bitmap tile and packs the (already pruned) tensor, period-stacked, into
+one ``BitmapWeight`` per tensor.  The result is a pytree mirroring
+``params["blocks"]`` (``BitmapWeight`` leaves where packed, ``None``
+where dense) that threads through ``build_serve_step`` → ``decode_step``
+→ ``decode_hidden`` → ``layers.mlp`` / ``_decode_attn``, so the per-step
+matmuls dispatch via ``kernels/ops.bitmap_spmm`` instead of dense ``@``.
+
+Every tensor that cannot pack falls back to dense *with a recorded
+reason* (no valid tile, not a 2-D projection, no compressed dispatch
+path yet, …) in a per-tensor manifest that also carries the modeled
+per-step HBM bytes — sparse (bitmap) vs dense — which
+``ServeEngine.report()`` aggregates across the whole stack.  This is the
+paper's regime end-to-end: EIE runs *every* FC layer from compressed
+storage; here the entire decode stack streams the bitmap format.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.sparse.format import BitmapWeight, pack_bitmap_stacked
+
+# (component, tensor) pairs with a compressed dispatch path in the decode
+# step.  Everything else records a fallback reason in the manifest.
+DISPATCHABLE = {
+    ("attn", "wq"), ("attn", "wk"), ("attn", "wv"), ("attn", "wo"),
+    ("mlp", "w_gate"), ("mlp", "w_up"), ("mlp", "w_down"),
+}
+
+
+def choose_block(k: int, n: int, cap: int = 128
+                 ) -> Optional[Tuple[int, int]]:
+    """Largest (BK, BN) bitmap tile dividing (k, n); BN % 8 == 0."""
+    bk = next((d for d in range(min(k, cap), 0, -1) if k % d == 0), None)
+    bn = next((d for d in range(min(n, cap), 0, -1)
+               if n % d == 0 and d % 8 == 0), None)
+    if bk is None or bn is None:
+        return None
+    return bk, bn
+
+
+@dataclasses.dataclass
+class PackEntry:
+    """Manifest row: one tensor's pack decision + modeled per-step bytes."""
+
+    path: str
+    shape: Tuple[int, ...]
+    packed: bool
+    reason: str                      # "" when packed, else why dense
+    block: Optional[Tuple[int, int]]
+    sparsity: float                  # measured zero fraction
+    sparse_bytes: int                # streamed per step on the chosen path
+    dense_bytes: int
+
+
+@dataclasses.dataclass
+class PackedModel:
+    """The packed pytree + its manifest and aggregate traffic model."""
+
+    blocks: Dict                     # mirrors params["blocks"]
+    manifest: List[PackEntry]
+
+    @property
+    def packed_entries(self) -> List[PackEntry]:
+        return [e for e in self.manifest if e.packed]
+
+    @property
+    def fallback_entries(self) -> List[PackEntry]:
+        return [e for e in self.manifest if not e.packed]
+
+    def stream_report(self) -> Dict:
+        """Modeled per-step weight-HBM bytes across the stack (no head —
+        the engine adds its head term on top)."""
+        sparse = sum(e.sparse_bytes for e in self.manifest)
+        dense = sum(e.dense_bytes for e in self.manifest)
+        return {
+            "sparse_bytes_per_step": sparse,
+            "dense_bytes_per_step": dense,
+            "reduction": dense / sparse if sparse else 1.0,
+            "packed_tensors": len(self.packed_entries),
+            "fallback_tensors": len(self.fallback_entries),
+            "fallbacks": {e.path: e.reason for e in self.fallback_entries},
+        }
+
+
+def _pack_leaf(path: str, comp: str, name: str, w, cap: int,
+               cache_dense: bool) -> Tuple[PackEntry, Optional[BitmapWeight]]:
+    arr = np.asarray(w)
+    dense_bytes = arr.size * arr.dtype.itemsize
+    sparsity = 1.0 - np.count_nonzero(arr) / max(arr.size, 1)
+
+    def fallback(reason: str) -> Tuple[PackEntry, None]:
+        return PackEntry(path=path, shape=arr.shape, packed=False,
+                         reason=reason, block=None, sparsity=sparsity,
+                         sparse_bytes=dense_bytes,
+                         dense_bytes=dense_bytes), None
+
+    if (comp, name) not in DISPATCHABLE:
+        return fallback("no compressed dispatch path")
+    if arr.ndim != 3:                # (P, K, N) = period-stacked projection
+        return fallback(f"not a 2-D projection (ndim={arr.ndim - 1})")
+    _, k, n = arr.shape
+    block = choose_block(k, n, cap)
+    if block is None:
+        return fallback(f"no (BK, BN) tile divides ({k}, {n}) with BN % 8")
+    bw = pack_bitmap_stacked(arr, block=block, cache_dense=cache_dense)
+    entry = PackEntry(path=path, shape=arr.shape, packed=True, reason="",
+                      block=block, sparsity=sparsity,
+                      sparse_bytes=bw.hbm_bytes, dense_bytes=dense_bytes)
+    return entry, bw
+
+
+def pack_model(params: Dict, cap: int = 128,
+               cache_dense: bool = False) -> PackedModel:
+    """Pack every dispatchable serve-time projection of ``params``.
+
+    Packing is lossless (per-tensor budget = max tile non-zero count), so
+    the packed stream is numerically identical to dense dispatch — the
+    compression comes from whatever pruning already happened upstream
+    (``global_l1_prune`` in the engine).
+
+    ``cache_dense`` attaches a pack-time dense rendering per tensor for
+    the xla oracle dispatch (decompression is a pack-time cost off-TPU;
+    it never counts toward the modeled HBM bytes) — the engine enables
+    it when the resolved kernel impl is "xla".
+    """
+    manifest: List[PackEntry] = []
+    packed_blocks: Dict = {}
+    for bname, bdict in params["blocks"].items():
+        packed_b: Dict = {}
+        for comp, tensors in bdict.items():
+            packed_c: Dict = {}
+            for name, w in tensors.items():
+                path = f"blocks/{bname}/{comp}/{name}"
+                entry, bw = _pack_leaf(path, comp, name, w, cap, cache_dense)
+                manifest.append(entry)
+                packed_c[name] = bw
+            packed_b[comp] = packed_c
+        packed_blocks[bname] = packed_b
+    return PackedModel(blocks=packed_blocks, manifest=manifest)

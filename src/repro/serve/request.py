@@ -24,6 +24,9 @@ class Request:
     prompt: Sequence[int]
     max_new_tokens: int
     arrival: float = 0.0            # decode-step offset at which it arrives
+    temperature: float = 0.0        # 0 = greedy; > 0 samples logits / T
+    seed: Optional[int] = None      # per-request sampling stream (None:
+    #                                 engine derives one from the rid)
 
     # -- filled in by the engine --
     tokens: List[int] = dataclasses.field(default_factory=list)

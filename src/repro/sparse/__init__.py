@@ -1,12 +1,14 @@
 """Framework-level sparsity: formats, pruning, sparse linear ops."""
 from repro.sparse.format import (BitmapWeight, BlockSparseWeight, pack_bitmap,
-                                 pack_block_sparse, unpack_bitmap,
+                                 pack_bitmap_stacked, pack_block_sparse,
+                                 unpack_bitmap, unpack_bitmap_stacked,
                                  unpack_block_sparse)
 from repro.sparse.pruning import (global_l1_prune, per_tensor_prune,
                                   sparsity_of)
 
 __all__ = [
-    "BitmapWeight", "BlockSparseWeight", "pack_bitmap", "pack_block_sparse",
-    "unpack_bitmap", "unpack_block_sparse", "global_l1_prune",
+    "BitmapWeight", "BlockSparseWeight", "pack_bitmap",
+    "pack_bitmap_stacked", "pack_block_sparse", "unpack_bitmap",
+    "unpack_bitmap_stacked", "unpack_block_sparse", "global_l1_prune",
     "per_tensor_prune", "sparsity_of",
 ]

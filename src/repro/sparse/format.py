@@ -31,13 +31,24 @@ import numpy as np
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class BitmapWeight:
-    """Bitmap-compressed (K, N) weight, tiled (BK, BN)."""
+    """Bitmap-compressed (K, N) weight, tiled (BK, BN).
+
+    ``dense_cache`` is an optional pack-time dense rendering consumed
+    only by the *xla reference dispatch* (``ref.bitmap_spmm_ref``): on
+    backends without the Pallas kernel the EIM decompression is a
+    pack-time cost, not a per-step software re-sort — the hardware
+    analogue decompresses in the accelerator datapath, so re-running it
+    per decode step on CPU would model nothing and cost real wall time.
+    It is deliberately **excluded from ``hbm_bytes``**: the traffic model
+    describes the compressed stream the Pallas kernel actually fetches.
+    """
 
     packed_bits: jax.Array   # (KT, NT, BK, BN // 8) uint8
     values: jax.Array        # (KT, NT, budget) dtype, row-major packed
     row_start: jax.Array     # (KT, NT, BK) int32 — first value slot per row
     shape: Tuple[int, int] = dataclasses.field(metadata=dict(static=True))
     block: Tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+    dense_cache: jax.Array | None = None    # (K, N) oracle-path rendering
 
     @property
     def budget(self) -> int:
@@ -51,7 +62,11 @@ class BitmapWeight:
 
     @property
     def dense_bytes(self) -> int:
-        return self.shape[0] * self.shape[1] * self.values.dtype.itemsize
+        # period-stacked weights (pack_bitmap_stacked) carry a leading P
+        # axis on the arrays while `shape` stays per-period — count it
+        periods = self.values.shape[0] if self.values.ndim == 4 else 1
+        return (periods * self.shape[0] * self.shape[1]
+                * self.values.dtype.itemsize)
 
     @property
     def compression(self) -> float:
@@ -59,12 +74,17 @@ class BitmapWeight:
 
 
 def pack_bitmap(w, block: Tuple[int, int] = (128, 128),
-                density_budget: float | None = None) -> BitmapWeight:
+                density_budget: float | None = None,
+                budget: int | None = None,
+                cache_dense: bool = False) -> BitmapWeight:
     """Pack a dense (K, N) array (zeros = pruned) into BitmapWeight.
 
     If a tile holds more non-zeros than ``budget = ceil(BK·BN·density_budget)``
     the smallest-magnitude surplus is re-pruned (top-k per tile), as recorded
-    in DESIGN.md.  Default budget = measured max tile density.
+    in DESIGN.md.  Default budget = measured max tile density.  An explicit
+    ``budget`` (≥ the max tile non-zero count — packing is then lossless)
+    lets callers share one value-slot budget across several packs, e.g. the
+    period-stacked pack below.
     """
     w = np.asarray(w)
     k, n = w.shape
@@ -76,7 +96,10 @@ def pack_bitmap(w, block: Tuple[int, int] = (128, 128),
 
     bits = tiles != 0
     per_tile = bits.reshape(kt, nt, -1).sum(-1)
-    if density_budget is None:
+    if budget is not None:
+        assert density_budget is None
+        assert budget >= int(per_tile.max()), (budget, int(per_tile.max()))
+    elif density_budget is None:
         budget = int(per_tile.max())
     else:
         budget = math.ceil(bk * bn * density_budget)
@@ -104,11 +127,13 @@ def pack_bitmap(w, block: Tuple[int, int] = (128, 128),
     values[i0, i1, slot[i0, i1, i2, i3]] = tiles[i0, i1, i2, i3]
 
     packed = np.packbits(flat_bits, axis=-1, bitorder="little")
+    dense = (jnp.asarray(tiles.transpose(0, 2, 1, 3).reshape(k, n))
+             if cache_dense else None)
     return BitmapWeight(
         packed_bits=jnp.asarray(packed),
         values=jnp.asarray(values),
         row_start=jnp.asarray(row_start),
-        shape=(k, n), block=(bk, bn))
+        shape=(k, n), block=(bk, bn), dense_cache=dense)
 
 
 def unpack_bitmap(bw: BitmapWeight) -> jax.Array:
@@ -125,6 +150,46 @@ def unpack_bitmap(bw: BitmapWeight) -> jax.Array:
         axis=-1).reshape(kt, nt, bk, bn)
     dense_tiles = jnp.where(bits != 0, vals, 0)
     return dense_tiles.transpose(0, 2, 1, 3).reshape(bw.shape)
+
+
+def pack_bitmap_stacked(w, block: Tuple[int, int],
+                        cache_dense: bool = False) -> BitmapWeight:
+    """Pack a period-stacked (P, K, N) tensor into one ``BitmapWeight``
+    whose array leaves carry a leading P axis.
+
+    All periods share the tile ``block`` and one value-slot ``budget``
+    (the max tile non-zero count across periods), so ``lax.scan`` over the
+    stacked container yields a plain per-period ``BitmapWeight`` each
+    iteration — exactly how the serving decode step consumes it.  Packing
+    is lossless: no re-pruning happens at pack time.
+    """
+    w = np.asarray(w)
+    assert w.ndim == 3, w.shape
+    p, k, n = w.shape
+    bk, bn = block
+    assert k % bk == 0 and n % bn == 0, (w.shape, block)
+    kt, nt = k // bk, n // bn
+    tile_nnz = (w.reshape(p, kt, bk, nt, bn) != 0).transpose(
+        0, 1, 3, 2, 4).reshape(p, kt, nt, -1).sum(-1)
+    budget = max(1, int(tile_nnz.max()))
+    per = [pack_bitmap(w[i], block=block, budget=budget,
+                       cache_dense=cache_dense) for i in range(p)]
+    return BitmapWeight(
+        packed_bits=jnp.stack([q.packed_bits for q in per]),
+        values=jnp.stack([q.values for q in per]),
+        row_start=jnp.stack([q.row_start for q in per]),
+        shape=(k, n), block=block,
+        dense_cache=(jnp.stack([q.dense_cache for q in per])
+                     if cache_dense else None))
+
+
+def unpack_bitmap_stacked(bw: BitmapWeight) -> jax.Array:
+    """Dense (P, K, N) oracle for a period-stacked ``BitmapWeight``."""
+    return jnp.stack([
+        unpack_bitmap(BitmapWeight(
+            packed_bits=bw.packed_bits[i], values=bw.values[i],
+            row_start=bw.row_start[i], shape=bw.shape, block=bw.block))
+        for i in range(bw.packed_bits.shape[0])])
 
 
 @jax.tree_util.register_dataclass

@@ -97,6 +97,58 @@ def test_bitmap_spmm_serving_head_shape(m, bm, dtype):
                                atol=_tol(dtype) * np.sqrt(k), rtol=1e-2)
 
 
+@pytest.mark.parametrize("m", [1, 4, 12])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bitmap_spmm_small_m_decode_path(m, dtype):
+    """Decode-shaped M (1..bm, not a multiple of 128): the small-M path
+    rounds the row tile to the sublane multiple instead of padding 32x,
+    and interpret-mode output equals the dense reference exactly in
+    shape and numerically in value."""
+    r = np.random.default_rng(m)
+    k, n = 64, 256
+    w = r.standard_normal((k, n)).astype(np.float32)
+    w *= r.random((k, n)) >= 0.7
+    bw = pack_bitmap(w.astype(dtype), block=(64, 128))
+    x = jnp.asarray(r.standard_normal((m, k)), dtype)
+    out = bitmap_spmm(x, bw, interpret=True)   # default bm=128 > m
+    assert out.shape == (m, n)
+    expect = ref.bitmap_spmm_ref(x, bw)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=_tol(dtype) * np.sqrt(k), rtol=1e-2)
+
+
+def test_bitmap_spmm_m_not_multiple_of_bm():
+    """M between bm and 2*bm that bm does not divide still works (pad to
+    the next row-block, slice back)."""
+    r = np.random.default_rng(0)
+    k, n, m = 64, 128, 130
+    w = r.standard_normal((k, n)).astype(np.float32)
+    w *= r.random((k, n)) >= 0.5
+    bw = pack_bitmap(w, block=(64, 64))
+    x = jnp.asarray(r.standard_normal((m, k)), jnp.float32)
+    out = bitmap_spmm(x, bw, interpret=True)
+    assert out.shape == (m, n)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.bitmap_spmm_ref(x, bw)),
+                               atol=2e-3 * np.sqrt(k), rtol=1e-2)
+
+
+def test_ops_bitmap_spmm_batched_activations():
+    """The ops dispatcher accepts (..., K) activations (decode passes
+    (B, 1, D)) on both impls."""
+    from repro.kernels import ops
+    r = np.random.default_rng(1)
+    w = r.standard_normal((64, 128)).astype(np.float32)
+    w *= r.random((64, 128)) >= 0.6
+    bw = pack_bitmap(w, block=(64, 64))
+    x = jnp.asarray(r.standard_normal((3, 1, 64)), jnp.float32)
+    a = ops.bitmap_spmm(x, bw, impl="xla")
+    b = ops.bitmap_spmm(x, bw, impl="pallas_interpret")
+    assert a.shape == (3, 1, 128) and b.shape == (3, 1, 128)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-3)
+
+
 def test_hbm_traffic_model_shrinks_with_density():
     """Sparse HBM bytes < dense, and monotonically shrinking as the
     weight gets sparser (the paper's traffic-cut lever)."""

@@ -1,0 +1,150 @@
+"""Whole-stack bitmap weight streaming: packed-vs-dense equivalence,
+manifest/fallback surfacing, traffic aggregation, sampling."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models.config import BlockCfg, ModelConfig
+from repro.serve import ServeEngine, pack_model, poisson_trace
+
+
+def _run_tokens(cfg, *, stream, sparsity=0.0, seed=0, n_requests=4,
+                head_sparsity=None, **engine_kw):
+    eng = ServeEngine(cfg, num_slots=2, max_len=32, sparsity=sparsity,
+                      seed=seed, stream_weights=stream,
+                      bitmap_head=stream, head_sparsity=head_sparsity,
+                      **engine_kw)
+    trace = poisson_trace(n_requests, rate=0.7, seed=3,
+                          vocab_size=cfg.vocab_size, max_new=(4, 8))
+    reqs = [eng.submit(**spec) for spec in trace]
+    eng.run()
+    return [r.tokens for r in reqs], eng
+
+
+# ------------------------------------------------------- equivalence -------
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "gemma3-4b",
+                                  "granite-moe-3b-a800m"])
+def test_packed_streaming_matches_dense_tokens(arch):
+    """sparsity=0: the fully-packed engine reproduces the dense engine's
+    tokens exactly, across attn/mlp, sliding-window and MoE archs —
+    packing is lossless and the bitmap dispatch is numerically identical
+    to dense ``@``."""
+    cfg = get_smoke_config(arch)
+    packed_toks, eng = _run_tokens(cfg, stream=True)
+    dense_toks, _ = _run_tokens(cfg, stream=False)
+    assert packed_toks == dense_toks
+    assert all(toks for toks in packed_toks)
+    assert eng.packed is not None and eng.packed.packed_entries
+
+
+def test_packed_streaming_lossless_under_pruning():
+    """At 75% sparsity the packed stream still equals dense dispatch of
+    the *pruned* weights token-for-token (the budget keeps every
+    surviving non-zero)."""
+    cfg = get_smoke_config("olmo-1b")
+    packed_toks, eng = _run_tokens(cfg, stream=True, sparsity=0.75)
+    dense_toks, _ = _run_tokens(cfg, stream=False, sparsity=0.75)
+    # dense engine serves a dense head; packed head is per-tensor pruned
+    # to head_sparsity — neutralise by comparing hidden-stack effects
+    # only via a 0-head-sparsity packed engine
+    packed0, _ = _run_tokens(cfg, stream=True, sparsity=0.75,
+                             head_sparsity=0.0)
+    assert packed0 == dense_toks
+    assert eng.report()["weight_stream"]["reduction"] > 2.0
+
+
+# ------------------------------------------------- manifest / traffic ------
+
+
+def test_pack_model_manifest_records_fallbacks():
+    cfg = get_smoke_config("granite-moe-3b-a800m")
+    eng = ServeEngine(cfg, num_slots=2, max_len=16, sparsity=0.5, seed=0)
+    pm = eng.packed
+    packed_paths = {e.path for e in pm.packed_entries}
+    assert any("attn/wq" in p for p in packed_paths)
+    # MoE expert tensors are 3-D per period: recorded dense with a reason
+    fb = {e.path: e.reason for e in pm.fallback_entries}
+    assert any("moe" in p for p in fb)
+    assert all(r for r in fb.values())
+    ws = eng.report()["weight_stream"]
+    assert ws["sparse_bytes_per_step"] < ws["dense_bytes_per_step"]
+    assert ws["packed_tensors"] == len(pm.packed_entries)
+    assert ws["fallbacks"] == {e.path: e.reason for e in pm.fallback_entries}
+
+
+def test_dense_cache_not_counted_in_hbm_bytes():
+    """The xla-oracle dense rendering must not change the modeled
+    compressed-stream bytes."""
+    from repro.sparse.format import pack_bitmap
+    r = np.random.default_rng(0)
+    w = r.standard_normal((64, 128)).astype(np.float32)
+    w *= r.random((64, 128)) >= 0.75
+    a = pack_bitmap(w, block=(64, 64))
+    b = pack_bitmap(w, block=(64, 64), cache_dense=True)
+    assert b.dense_cache is not None
+    assert a.hbm_bytes == b.hbm_bytes
+    np.testing.assert_array_equal(np.asarray(b.dense_cache), w)
+
+
+def test_stacked_pack_roundtrip():
+    """Period-stacked packing is lossless per period, shares one budget,
+    and the stacked unpack oracle reproduces the input exactly."""
+    from repro.sparse.format import (pack_bitmap_stacked,
+                                     unpack_bitmap_stacked)
+    r = np.random.default_rng(2)
+    w = r.standard_normal((3, 64, 128)).astype(np.float32)
+    w *= r.random((3, 64, 128)) >= 0.6
+    bw = pack_bitmap_stacked(w, block=(64, 64))
+    assert bw.packed_bits.shape[0] == 3
+    np.testing.assert_array_equal(np.asarray(unpack_bitmap_stacked(bw)), w)
+
+
+def test_head_fallback_is_surfaced():
+    """A head that no (BK, BN) tile divides must warn and report the
+    fallback instead of silently claiming head_compression=1.0."""
+    cfg = ModelConfig(name="oddvocab", d_model=32, num_layers=2,
+                      num_heads=2, num_kv_heads=2, d_ff=64,
+                      vocab_size=251,  # prime: no BN % 8 divisor
+                      pattern=(BlockCfg(mixer="attn"),),
+                      tie_embeddings=True, max_seq_len=32)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        eng = ServeEngine(cfg, num_slots=2, max_len=16, seed=0,
+                          stream_weights=False)
+    assert eng.lm_weight is None
+    assert eng.head_fallback and "vocab=251" in eng.head_fallback
+    assert any("dense" in str(w.message) for w in caught)
+    rep = eng.report()
+    assert rep["head_fallback"] == eng.head_fallback
+    assert rep["head_compression"] == 1.0
+
+
+# ---------------------------------------------------------- sampling -------
+
+
+def test_sampling_reproducible_and_greedy_unchanged():
+    cfg = get_smoke_config("olmo-1b")
+
+    def run(top_k):
+        eng = ServeEngine(cfg, num_slots=2, max_len=32, seed=0, top_k=top_k)
+        g = eng.submit([5], max_new_tokens=6)
+        s = eng.submit([5], max_new_tokens=6, temperature=1.0, seed=11)
+        eng.run()
+        return g.tokens, s.tokens
+
+    g1, s1 = run(top_k=8)
+    g2, s2 = run(top_k=8)
+    assert g1 == g2 and s1 == s2          # per-request seeds: deterministic
+    assert s1 != g1                       # temperature actually samples
+    # greedy requests are untouched by the sampling machinery
+    eng = ServeEngine(cfg, num_slots=2, max_len=32, seed=0)
+    g3 = eng.submit([5], max_new_tokens=6)
+    eng.run()
+    assert g3.tokens == g1
+
+    _, s_notrunc = run(top_k=0)
+    assert len(s_notrunc) == 6            # top_k=0 path also samples
