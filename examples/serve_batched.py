@@ -8,6 +8,11 @@ every packable projection (attention q/k/v/o here; Mamba/MoE tensors
 record dense fallbacks) plus the LM head streams in the paper's
 bitmap-compressed format every step.
 
+The KV cache is paged (``paged=True``): attention blocks cache into
+fixed-size pages gathered through per-slot page tables, so reserved
+cache bytes track live tokens instead of ``num_slots × max_len``
+(Mamba state stays slotted — it is O(1) per slot).
+
 Run:  PYTHONPATH=src python examples/serve_batched.py
 """
 from repro.serve import ServeEngine, poisson_trace
@@ -15,7 +20,8 @@ from repro.serve import ServeEngine, poisson_trace
 
 def main():
     eng = ServeEngine.from_arch("jamba-v0.1-52b", smoke=True, num_slots=2,
-                                max_len=64, sparsity=0.5, seed=0)
+                                max_len=64, sparsity=0.5, seed=0,
+                                paged=True, page_len=8)
     trace = poisson_trace(6, rate=0.4, seed=0,
                           vocab_size=eng.cfg.vocab_size, max_new=(8, 16))
     reqs = [eng.submit(**spec) for spec in trace]
@@ -32,6 +38,10 @@ def main():
     print(f"latency p50 {lat['p50'] * 1e3:.1f}ms / p99 "
           f"{lat['p99'] * 1e3:.1f}ms; per-request slots: "
           f"{[r.slot for r in reqs]}")
+    pg = rep["paging"]
+    print(f"paged KV: peak {pg['pages_peak']} of {pg['pages_total']} "
+          f"pool pages; reserved {pg['reserved_kv_bytes']/1e3:.1f}kB vs "
+          f"contiguous {pg['contiguous_kv_bytes']/1e3:.1f}kB")
     print("OK")
 
 

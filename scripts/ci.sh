@@ -17,4 +17,9 @@ PYTHONPATH=src python benchmarks/bitmap_streaming.py --smoke \
     --sparsities 0.0 0.75 --slots 2 --requests 8 --max-len 32 \
     --out BENCH_serve.json
 
+echo "== bench smoke: paged KV cache -> BENCH_serve.json (paging) =="
+PYTHONPATH=src python benchmarks/paged_serving.py --smoke \
+    --page-lens 8 --slots 2 --requests 8 --max-len 128 --repeats 2 \
+    --out BENCH_serve.json
+
 echo "CI OK"

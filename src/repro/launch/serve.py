@@ -60,6 +60,8 @@ def serve_trace(arch: str, smoke: bool = True, slots: int = 4,
                 head_sparsity: float | None = None, seed: int = 0,
                 model_parallel: int = 1, stream_weights: bool = True,
                 temperature: float = 0.0, top_k: int = 0,
+                paged: bool = False, page_len: int = 16,
+                page_pool_tokens: int | None = None,
                 verbose: bool = True) -> dict:
     """Continuous-batching mode: seeded Poisson arrivals into the engine.
 
@@ -69,13 +71,18 @@ def serve_trace(arch: str, smoke: bool = True, slots: int = 4,
     fully dense-dispatch baseline (no stack streaming, dense head).
     ``temperature`` > 0 samples every request at that temperature
     (top-``top_k`` truncated) with per-request seeds; default greedy.
+    ``paged`` pages the KV cache into ``page_len``-token pages
+    (``page_pool_tokens`` bounds each pool; out-of-pages admissions
+    queue) — tokens are identical to the contiguous cache.
     """
     eng = ServeEngine.from_arch(arch, smoke=smoke, num_slots=slots,
                                 max_len=max_len, sparsity=sparsity,
                                 head_sparsity=head_sparsity,
                                 seed=seed, model_parallel=model_parallel,
                                 stream_weights=stream_weights,
-                                bitmap_head=stream_weights, top_k=top_k)
+                                bitmap_head=stream_weights, top_k=top_k,
+                                paged=paged, page_len=page_len,
+                                page_pool_tokens=page_pool_tokens)
     prompt_len = (1, min(4, max_len))
     hi = max(1, min(max_new[1], max_len - prompt_len[1] + 1))
     lo = max(1, min(max_new[0], hi))
@@ -99,6 +106,16 @@ def serve_trace(arch: str, smoke: bool = True, slots: int = 4,
             print(f"serving at {eng.weight_sparsity:.2%} weight sparsity "
                   f"(head compression {eng.head_compression:.2f}x)")
         lat, ftl = rep["latency_s"], rep["first_token_s"]
+        pg = rep["paging"]
+        if pg["paged"]:
+            print(f"paged KV: {pg['pages_peak']} peak / "
+                  f"{pg['pages_total']} pool pages ({pg['page_len']} "
+                  f"tokens each) | reserved KV "
+                  f"{pg['reserved_kv_bytes']/1e3:.1f}kB vs contiguous "
+                  f"{pg['contiguous_kv_bytes']/1e3:.1f}kB "
+                  f"({pg['reserved_reduction']:.2f}x)")
+        elif pg["fallback"]:
+            print(f"  paging fallback: {pg['fallback']}")
         print(f"{rep['requests']} requests / {rep['generated_tokens']} "
               f"tokens in {rep['wall_s']:.2f}s over {slots} slots "
               f"(occupancy {rep['slot_occupancy']:.0%})")
@@ -128,7 +145,18 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0,
-                    help="top-k truncation for sampled requests (0 = off)")
+                    help="default top-k truncation for sampled requests "
+                         "(0 = off; requests may override per-submit)")
+    ap.add_argument("--paged", action="store_true",
+                    help="page the KV cache (fixed-size pages + per-slot "
+                         "page tables; reserved bytes scale with live "
+                         "tokens)")
+    ap.add_argument("--page-len", type=int, default=16,
+                    help="tokens per KV page (with --paged)")
+    ap.add_argument("--page-pool-tokens", type=int, default=None,
+                    help="bound each page pool to this many tokens "
+                         "(default: worst case; smaller pools queue "
+                         "admissions when pages run out)")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -138,6 +166,8 @@ def main():
                 head_sparsity=args.head_sparsity,
                 stream_weights=not args.dense_stack,
                 temperature=args.temperature, top_k=args.top_k,
+                paged=args.paged, page_len=args.page_len,
+                page_pool_tokens=args.page_pool_tokens,
                 seed=args.seed, model_parallel=args.model_parallel)
 
 

@@ -110,14 +110,21 @@ def build_serve_step(cfg: ModelConfig, impl: Optional[str] = None,
     and MLP projection; ``impl`` pins the kernel dispatch
     ("xla" | "pallas" | "pallas_interpret", default backend-chosen).
 
+    ``page_tables`` (``{bname: (B, page_slots) int32}``, see
+    ``repro.serve.paging``) routes the KV cache through the paged layout;
+    omitted, the contiguous per-slot cache is unchanged.
+
     ``embed_rng`` (frames frontend): a PRNG key the step derives the
     per-step frame embeddings from on device — no host round-trip in the
     decode loop.
 
     Sampling: with ``sample_keys`` ((B, 2) uint32, one key per slot) and
     ``temperature`` ((B,) f32) the head samples from
-    ``softmax(logits / T)`` (top-``top_k`` truncated when ``top_k`` > 0);
-    slots with T == 0 stay exactly greedy, so the default is unchanged.
+    ``softmax(logits / T)``; slots with T == 0 stay exactly greedy, so
+    the default is unchanged.  ``top_ks`` ((B,) int32) truncates each
+    slot's sample to its own top-k via a masked threshold (0 = no
+    truncation) — per-request top_k with one jit signature; the builder's
+    static ``top_k`` is only a fallback default when no vector is passed.
     Keys are folded with the slot position, so a request's sample at
     position p depends only on (its seed, p) — deterministic under
     continuous batching regardless of scheduling.
@@ -125,21 +132,34 @@ def build_serve_step(cfg: ModelConfig, impl: Optional[str] = None,
 
     def serve_step(params, cache, tokens, pos, embeds=None, lm_weight=None,
                    packed=None, embed_rng=None, sample_keys=None,
-                   temperature=None):
+                   temperature=None, top_ks=None, page_tables=None):
         if embed_rng is not None and embeds is None:
             b = pos.shape[0] if jnp.ndim(pos) else 1
             embeds = jax.random.normal(embed_rng, (b, 1, cfg.d_model),
                                        jnp.float32)
         logits, new_cache = decode_step(params, cache, cfg, tokens, pos,
                                         embeds=embeds, lm_weight=lm_weight,
-                                        packed=packed, lm_impl=impl)
+                                        packed=packed, lm_impl=impl,
+                                        page_tables=page_tables)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         if sample_keys is not None and temperature is not None:
             posv = jnp.broadcast_to(pos, next_tok.shape)
             keys = jax.vmap(jax.random.fold_in)(sample_keys, posv)
             scaled = logits.astype(jnp.float32) / jnp.maximum(
                 temperature, 1e-6)[:, None]
-            if top_k > 0:
+            if top_ks is not None:
+                # per-slot masked top-k: each row keeps values >= its own
+                # k-th largest (same tie behaviour as lax.top_k's static
+                # truncation); k <= 0 rows keep the full distribution
+                v = scaled.shape[-1]
+                desc = -jnp.sort(-scaled, axis=-1)
+                idx = jnp.clip(top_ks - 1, 0, v - 1)[:, None]
+                kth = jnp.take_along_axis(desc, idx, axis=1)
+                scaled = jnp.where((top_ks[:, None] > 0) & (scaled < kth),
+                                   -jnp.inf, scaled)
+            elif top_k > 0:
+                # every slot at the engine default: the static lax.top_k
+                # threshold (O(V·k)) beats the per-slot full-vocab sort
                 kth = jax.lax.top_k(scaled, top_k)[0][:, -1:]
                 scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
             sampled = jax.vmap(jax.random.categorical)(keys, scaled)

@@ -1,12 +1,14 @@
 """Unified decoder model stack covering all assigned architectures."""
 from repro.models.config import BlockCfg, ModelConfig, SparsityCfg
-from repro.models.model import (cache_structs, decode_hidden, decode_step,
-                                forward, head_logits, init_cache,
-                                init_params, lm_loss, loss_fn, param_shapes,
-                                param_structs)
+from repro.models.model import (attn_capacity, cache_structs,
+                                decode_hidden, decode_step, forward,
+                                head_logits, init_cache, init_params,
+                                lm_loss, loss_fn, paged_layout,
+                                param_shapes, param_structs)
 
 __all__ = [
-    "BlockCfg", "ModelConfig", "SparsityCfg", "cache_structs",
-    "decode_hidden", "decode_step", "forward", "head_logits", "init_cache",
-    "init_params", "lm_loss", "loss_fn", "param_shapes", "param_structs",
+    "BlockCfg", "ModelConfig", "SparsityCfg", "attn_capacity",
+    "cache_structs", "decode_hidden", "decode_step", "forward",
+    "head_logits", "init_cache", "init_params", "lm_loss", "loss_fn",
+    "paged_layout", "param_shapes", "param_structs",
 ]

@@ -214,6 +214,43 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      preferred_element_type=jnp.float32)
     return out.reshape(b, 1, hq, d).astype(q.dtype)
 
+def paged_kv_update(k_pool: jax.Array, v_pool: jax.Array, k: jax.Array,
+                    v: jax.Array, page_table: jax.Array,
+                    write_slot: jax.Array
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Write one decode step's K/V lines through a page table.
+
+    k_pool/v_pool: (NP, L, Hkv, D) page pools (NP physical pages of L
+    tokens; page 0 is the reserved trash page).  k/v: (B, 1, Hkv, D).
+    page_table: (B, S) int32 physical page ids, 0 = unmapped.
+    write_slot: (B,) logical token slot in [0, S*L).
+
+    Rows whose logical page is unmapped (idle batch slots decoding at
+    position 0) resolve to page 0 and scribble into the trash line —
+    live pages are only ever written by the slot that owns them, so
+    distinct rows never collide outside the trash page.
+    """
+    page_len = k_pool.shape[1]
+    pi = write_slot // page_len
+    off = write_slot % page_len
+    phys = jnp.take_along_axis(page_table, pi[:, None], axis=1)[:, 0]
+    k_pool = k_pool.at[phys, off].set(k[:, 0].astype(k_pool.dtype))
+    v_pool = v_pool.at[phys, off].set(v[:, 0].astype(v_pool.dtype))
+    return k_pool, v_pool
+
+
+def paged_gather(pool: jax.Array, page_table: jax.Array) -> jax.Array:
+    """Gather each slot's pages into a contiguous (B, S*L, H, D) view.
+
+    Unmapped entries (0) gather the trash page — garbage lines that the
+    attention validity mask (slot_pos <= pos, window) always excludes, so
+    pages never need zeroing when they move between requests.
+    """
+    b, s = page_table.shape
+    lines = pool[page_table.reshape(-1)]            # (B*S, L, H, D)
+    return lines.reshape(b, s * pool.shape[1], *pool.shape[2:])
+
+
 # ----------------------------------------------------------------- MoE -----
 
 

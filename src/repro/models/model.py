@@ -307,12 +307,57 @@ def loss_fn(params: Dict, batch: Dict, cfg: ModelConfig
 # ------------------------------------------------------------- decode ------
 
 
+def attn_capacity(blk: BlockCfg, max_len: int) -> int:
+    """Per-slot KV line count for one attention block: the sliding window
+    bounds the live set, so windowed blocks cache a ring of that size."""
+    return min(blk.window, max_len) if blk.window else max_len
+
+
+def paged_layout(cfg: ModelConfig, max_len: int,
+                 page_len: int) -> Dict[str, int]:
+    """Page-table width per attention block: ``{bname: page_slots}``.
+
+    ``page_slots = ceil(capacity / page_len)`` — the number of page-table
+    entries one slot needs to cover its whole capacity (window-bounded for
+    sliding-window blocks).  Blocks with no attention mixer carry O(1)
+    recurrent state per slot and are not paged.
+    """
+    assert page_len > 0
+    out = {}
+    for i, blk in enumerate(cfg.pattern):
+        if blk.mixer == "attn":
+            out[f"b{i}"] = -(-attn_capacity(blk, max_len) // page_len)
+    return out
+
+
+def paged_addressing(page_slots: int, page_len: int,
+                     window: Optional[int]) -> Tuple[int, bool]:
+    """(capacity_tokens, ring) for one paged pool — the write addressing
+    that the host-side allocator (``PagedKVCache.ensure``) and the
+    device-side cache write (``_decode_attn``) must agree on exactly:
+    ring pools write at ``pos % capacity``, others clip to the last
+    slot.  One definition for both sides, so they cannot drift."""
+    cap = page_slots * page_len
+    return cap, window is not None and cap >= window
+
+
 def _cache_shapes(cfg: ModelConfig, blk: BlockCfg, batch: int,
-                  max_len: int) -> Dict[str, tuple]:
+                  max_len: int, page_len: int = 0,
+                  pool_pages: Optional[int] = None) -> Dict[str, tuple]:
     p = cfg.num_periods
     hd = cfg.resolved_head_dim
     if blk.mixer == "attn":
-        c = min(blk.window, max_len) if blk.window else max_len
+        if page_len > 0:
+            # paged layout: a pool of fixed-size pages shared across slots
+            # (axis 1 = physical page id, axis 2 = line within the page);
+            # a per-slot page table maps logical token slots onto pages.
+            # Physical page 0 is the reserved trash page (never allocated)
+            # that unmapped table entries point at.
+            slots = -(-attn_capacity(blk, max_len) // page_len)
+            n = (batch * slots + 1) if pool_pages is None else pool_pages
+            return {"k": (p, n, page_len, cfg.num_kv_heads, hd),
+                    "v": (p, n, page_len, cfg.num_kv_heads, hd)}
+        c = attn_capacity(blk, max_len)
         return {"k": (p, batch, c, cfg.num_kv_heads, hd),
                 "v": (p, batch, c, cfg.num_kv_heads, hd)}
     if blk.mixer == "mamba":
@@ -326,11 +371,22 @@ def _cache_shapes(cfg: ModelConfig, blk: BlockCfg, batch: int,
     raise ValueError(blk.mixer)
 
 
-def cache_structs(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
-    """ShapeDtypeStructs of the decode cache (bf16 KV, f32 SSM states)."""
+def cache_structs(cfg: ModelConfig, batch: int, max_len: int,
+                  page_len: int = 0,
+                  pool_pages: Optional[Dict[str, int]] = None) -> Dict:
+    """ShapeDtypeStructs of the decode cache (bf16 KV, f32 SSM states).
+
+    ``page_len > 0`` switches attention leaves to the paged layout:
+    ``(P, pool, page_len, Hkv, hd)`` pools indexed through per-slot page
+    tables (see ``paged_layout`` / ``repro.serve.paging``), with
+    ``pool_pages[bname]`` physical pages per block (default: worst case
+    ``batch * page_slots`` + the trash page).  Recurrent (SSM/RWKV) state
+    stays slotted — it is O(1) per slot and needs no paging.
+    """
     out = {}
     for i, blk in enumerate(cfg.pattern):
-        shp = _cache_shapes(cfg, blk, batch, max_len)
+        shp = _cache_shapes(cfg, blk, batch, max_len, page_len,
+                            (pool_pages or {}).get(f"b{i}"))
         entry = {}
         for k, s in shp.items():
             dt = jnp.float32 if k in ("h", "s") else jnp.dtype(
@@ -344,16 +400,28 @@ def cache_structs(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
     return out
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               page_len: int = 0,
+               pool_pages: Optional[Dict[str, int]] = None) -> Dict:
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
-                        cache_structs(cfg, batch, max_len))
+                        cache_structs(cfg, batch, max_len, page_len,
+                                      pool_pages))
 
 
 def _decode_attn(p: Dict, x: jax.Array, cache: Dict, cfg: ModelConfig,
                  blk: BlockCfg, pos: jax.Array, packed: Optional[Dict] = None,
-                 impl: Optional[str] = None) -> Tuple[jax.Array, Dict]:
+                 impl: Optional[str] = None,
+                 page_table: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, Dict]:
     """``packed`` maps projection names (wq/wk/wv/wo) to ``BitmapWeight``s;
-    present entries stream compressed through kernels/ops (serve time)."""
+    present entries stream compressed through kernels/ops (serve time).
+
+    ``page_table`` ((B, page_slots) int32, physical page ids, 0 = the
+    reserved trash page) switches the cache onto the paged layout: the
+    K/V write scatters through the table into the page pool and attention
+    gathers the slot's pages back into one contiguous view (see
+    ``repro.serve.paging``).
+    """
     b, _, d = x.shape
     hd = cfg.resolved_head_dim
     h, kv = cfg.num_heads, cfg.num_kv_heads
@@ -373,24 +441,34 @@ def _decode_attn(p: Dict, x: jax.Array, cache: Dict, cfg: ModelConfig,
     posb = posv[:, None]
     q = L.rope(q, posb, cfg.rope_theta)
     k = L.rope(k, posb, cfg.rope_theta)
-    c = cache["k"].shape[1]
-    ring = blk.window is not None and c == blk.window
-    if pos.ndim == 0:
-        slot = (pos % c) if ring else pos
-        k_cache = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+    if page_table is not None:
+        plen = cache["k"].shape[1]
+        cap, ring = paged_addressing(page_table.shape[1], plen, blk.window)
+        slot = (posv % cap) if ring else jnp.clip(posv, 0, cap - 1)
+        k_cache, v_cache = L.paged_kv_update(
+            cache["k"], cache["v"], k, v, page_table, slot)
+        k_att = L.paged_gather(k_cache, page_table)
+        v_att = L.paged_gather(v_cache, page_table)
     else:
-        # per-slot positions (continuous batching): each batch row writes
-        # its own cache line, so the update is a batched scatter
-        slot = (posv % c) if ring else jnp.clip(posv, 0, c - 1)
-        bidx = jnp.arange(b)
-        k_cache = cache["k"].at[bidx, slot].set(
-            k[:, 0].astype(cache["k"].dtype))
-        v_cache = cache["v"].at[bidx, slot].set(
-            v[:, 0].astype(cache["v"].dtype))
-    o = L.decode_attention(q, k_cache, v_cache, pos, window=blk.window,
+        c = cache["k"].shape[1]
+        ring = blk.window is not None and c == blk.window
+        if pos.ndim == 0:
+            slot = (pos % c) if ring else pos
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        else:
+            # per-slot positions (continuous batching): each batch row
+            # writes its own cache line, so the update is a batched scatter
+            slot = (posv % c) if ring else jnp.clip(posv, 0, c - 1)
+            bidx = jnp.arange(b)
+            k_cache = cache["k"].at[bidx, slot].set(
+                k[:, 0].astype(cache["k"].dtype))
+            v_cache = cache["v"].at[bidx, slot].set(
+                v[:, 0].astype(cache["v"].dtype))
+        k_att, v_att = k_cache, v_cache
+    o = L.decode_attention(q, k_att, v_att, pos, window=blk.window,
                            ring=ring)
     out = L.matmul_or_bitmap(o.reshape(b, 1, h * hd), p["wo"],
                              pk.get("wo"), impl)
@@ -401,7 +479,9 @@ def decode_hidden(params: Dict, cache: Dict, cfg: ModelConfig,
                   tokens: Optional[jax.Array], pos: jax.Array,
                   embeds: Optional[jax.Array] = None,
                   packed: Optional[Dict] = None,
-                  impl: Optional[str] = None) -> Tuple[jax.Array, Dict]:
+                  impl: Optional[str] = None,
+                  page_tables: Optional[Dict] = None
+                  ) -> Tuple[jax.Array, Dict]:
     """One decode step up to (and including) the final norm — no LM head.
 
     tokens: (B, 1) (or embeds (B, 1, D)); pos: scalar shared position or a
@@ -414,6 +494,11 @@ def decode_hidden(params: Dict, cache: Dict, cfg: ModelConfig,
     ``BitmapWeight`` leaves (or None where a tensor fell back to dense —
     see repro.serve.packed); the scan slices off the period axis so each
     iteration's projections stream bitmap-compressed through kernels/ops.
+
+    ``page_tables`` (``{bname: (B, page_slots) int32}``) switches attention
+    blocks onto the paged-cache layout.  Tables are shared by all periods
+    of a block (the physical-page axis of each pool already carries the
+    period dim), so they ride into the scan body by closure, not as xs.
     """
     x = embed_inputs(params, cfg, tokens, embeds)
     b = x.shape[0]
@@ -428,7 +513,9 @@ def decode_hidden(params: Dict, cache: Dict, cfg: ModelConfig,
             nc = {}
             if blk.mixer == "attn":
                 o, nc = _decode_attn(bp["attn"], x, pc, cfg, blk, pos,
-                                     packed=pw.get("attn"), impl=impl)
+                                     packed=pw.get("attn"), impl=impl,
+                                     page_table=(page_tables or {}).get(
+                                         f"b{i}"))
                 x = x + o
             elif blk.mixer == "mamba":
                 xn = L.norm(x, bp["mamba"].get("norm"), cfg.norm)
@@ -497,14 +584,18 @@ def decode_step(params: Dict, cache: Dict, cfg: ModelConfig,
                 tokens: Optional[jax.Array], pos: jax.Array,
                 embeds: Optional[jax.Array] = None, lm_weight=None,
                 packed: Optional[Dict] = None,
-                lm_impl: Optional[str] = None) -> Tuple[jax.Array, Dict]:
+                lm_impl: Optional[str] = None,
+                page_tables: Optional[Dict] = None
+                ) -> Tuple[jax.Array, Dict]:
     """One decode step + LM head: (logits (B, V), new cache).
 
     ``packed`` (block-tree of period-stacked ``BitmapWeight``s) and
     ``lm_weight`` together put the whole per-step weight stream —
     attention q/k/v/o, MLP gate/up/down, LM head — on the
-    bitmap-compressed kernels/ops path.
+    bitmap-compressed kernels/ops path; ``page_tables`` routes the KV
+    cache through the paged layout (see ``decode_hidden``).
     """
     x, new_cache = decode_hidden(params, cache, cfg, tokens, pos,
-                                 embeds=embeds, packed=packed, impl=lm_impl)
+                                 embeds=embeds, packed=packed, impl=lm_impl,
+                                 page_tables=page_tables)
     return head_logits(params, cfg, x[:, 0], lm_weight, lm_impl), new_cache

@@ -40,3 +40,15 @@ class SlotKVCache:
         assert 0 <= slot < self.num_slots
         self.cache = self._reset(self.cache, jnp.int32(slot))
         self.resets += 1
+
+    def reserved_kv_bytes(self) -> int:
+        """Bytes reserved for attention KV lines — the worst-case
+        ``num_slots × capacity`` contiguous reservation the paged layout
+        (repro.serve.paging) replaces."""
+        total = 0
+        for leaf in self.cache.values():
+            for name in ("k", "v"):
+                if name in leaf:
+                    a = leaf[name]
+                    total += int(a.size) * a.dtype.itemsize
+        return total

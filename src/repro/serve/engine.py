@@ -9,7 +9,12 @@ system:
   mid-flight — no drain barrier, decode keeps running at full batch
   width under a stream of arrivals (``repro.serve.scheduler``);
 * a slotted KV-cache manager that reuses one donated ``init_cache``
-  allocation across request lifetimes (``repro.serve.cache``);
+  allocation across request lifetimes (``repro.serve.cache``) — or, with
+  ``paged=True``, a paged KV cache (``repro.serve.paging``): fixed-size
+  pages allocated lazily off a free list and gathered through per-slot
+  page tables, so reserved cache bytes scale with live tokens instead of
+  ``num_slots × max_len`` and out-of-pages admission queues instead of
+  crashing;
 * weights pruned once (``global_l1_prune``) and the *whole serve-time
   stack* packed once into the paper's ``BitmapWeight`` format
   (``repro.serve.packed.pack_model``): attention q/k/v/o, MLP
@@ -41,7 +46,8 @@ from repro.models.config import ModelConfig
 from repro.models.model import init_params, lm_head_weight
 from repro.serve.cache import SlotKVCache
 from repro.serve.packed import PackedModel, choose_block, pack_model
-from repro.serve.request import Request, RequestState
+from repro.serve.paging import PagedKVCache
+from repro.serve.request import Request, RequestRejected, RequestState
 from repro.serve.scheduler import SlotScheduler
 from repro.serve.trace import percentiles
 from repro.sparse.format import BitmapWeight, pack_bitmap
@@ -76,7 +82,9 @@ class ServeEngine:
                  model_parallel: int = 1, impl: Optional[str] = None,
                  bitmap_head: bool = True,
                  head_sparsity: Optional[float] = None,
-                 stream_weights: bool = True, top_k: int = 0):
+                 stream_weights: bool = True, top_k: int = 0,
+                 paged: bool = False, page_len: int = 16,
+                 page_pool_tokens: Optional[int] = None):
         """``head_sparsity``: ``global_l1_prune`` deliberately keeps
         (tied) embeddings dense, so the LM head is additionally pruned
         per-tensor to this level before packing — that is what gives the
@@ -91,9 +99,21 @@ class ServeEngine:
         identical to dense dispatch at any sparsity; pass False for a
         dense-dispatch baseline.
 
-        ``top_k``: static top-k truncation for sampled requests (0 = no
-        truncation; per-request ``temperature``/``seed`` live on
-        ``submit``, greedy default unchanged)."""
+        ``top_k``: engine-default top-k truncation for sampled requests
+        (0 = no truncation); each request may override it via
+        ``submit(top_k=...)`` — the jitted sampler then applies a
+        per-slot masked top-k (all-default serving keeps the static
+        ``lax.top_k`` path; the first override costs one extra jit
+        signature, mirroring how sampling itself engages).
+
+        ``paged``: page the attention KV cache (``repro.serve.paging``)
+        into ``page_len``-token pages gathered through per-slot page
+        tables — reserved cache bytes scale with live tokens instead of
+        ``num_slots × max_len``.  ``page_pool_tokens`` bounds each page
+        pool (default: worst case, still lazily allocated); when pages
+        run out, admission queues until retirements free pages.
+        ``paged=False`` (or ``page_len=0``) keeps the contiguous layout.
+        """
         self.cfg = cfg
         self.num_slots = num_slots
         self.max_len = max_len
@@ -154,7 +174,31 @@ class ServeEngine:
                                  if self.lm_weight is not None else 1.0)
 
         self.scheduler = SlotScheduler(num_slots)
-        self.kv = SlotKVCache(cfg, num_slots, max_len)
+        # paged KV cache: pages only help when some block caches per-token
+        # KV lines, and the paged pools (like the packed weights) have no
+        # sharded layout yet — fall back to contiguous with a reason
+        self.paging_fallback: Optional[str] = None
+        if not paged:
+            page_len = 0
+        elif mp_actual > 1:
+            page_len = 0
+            self.paging_fallback = (
+                f"model_parallel={mp_actual}: no sharded layout for paged "
+                f"KV pools yet; contiguous cache kept")
+            warnings.warn(f"paged KV cache fell back to contiguous: "
+                          f"{self.paging_fallback}", stacklevel=2)
+        elif not any(b.mixer == "attn" for b in cfg.pattern):
+            page_len = 0
+            self.paging_fallback = (
+                f"{cfg.name}: no attention blocks — recurrent state is "
+                f"O(1)/slot, nothing to page")
+            warnings.warn(f"paged KV cache fell back to contiguous: "
+                          f"{self.paging_fallback}", stacklevel=2)
+        self.page_len = page_len
+        self.kv = (PagedKVCache(cfg, num_slots, max_len, page_len,
+                                pool_tokens=page_pool_tokens)
+                   if page_len else SlotKVCache(cfg, num_slots, max_len))
+        self.top_k_default = top_k
         step_fn = build_serve_step(cfg, impl=impl, top_k=top_k)
         self._jit_step = jax.jit(step_fn, donate_argnums=(1,))
 
@@ -169,7 +213,12 @@ class ServeEngine:
         # all-greedy serving never pays the categorical/top-k machinery
         # (flipping it later costs one extra jit signature compile).
         self._use_sampling = False
+        # the per-slot top-k vector (a full-vocab sort in the sampler)
+        # only engages once some request *overrides* the engine default —
+        # all-default serving keeps the cheaper static lax.top_k path
+        self._use_topk_vec = False
         self._temp = np.zeros(num_slots, np.float32)
+        self._topk = np.zeros(num_slots, np.int32)
         self._keys = np.zeros((num_slots, 2), np.uint32)
         self._seed = seed
         self._warm = False
@@ -188,20 +237,38 @@ class ServeEngine:
 
     def submit(self, prompt: Sequence[int], max_new_tokens: int,
                arrival: float = 0.0, temperature: float = 0.0,
-               seed: Optional[int] = None) -> Request:
-        """``temperature`` > 0 samples this request's tokens (top-k per
-        the engine's static ``top_k``) with its own PRNG stream, seeded
-        by ``seed`` (default: engine seed + rid); 0 stays greedy."""
+               seed: Optional[int] = None,
+               top_k: Optional[int] = None) -> Request:
+        """``temperature`` > 0 samples this request's tokens with its own
+        PRNG stream, seeded by ``seed`` (default: engine seed + rid); 0
+        stays greedy.  ``top_k`` truncates *this request's* sampling
+        (None: the engine default; 0: no truncation).
+
+        Raises ``RequestRejected`` (typed, process keeps serving) when
+        the request can never run: empty prompt, budget beyond
+        ``max_len``, or — under paging — a worst-case page need larger
+        than the whole pool.  A merely *busy* engine never rejects; the
+        request queues until slots (and pages) free up."""
         prompt = [int(t) for t in prompt]
-        assert prompt, "empty prompt"
-        assert len(prompt) + max_new_tokens - 1 <= self.max_len, (
-            f"prompt {len(prompt)} + {max_new_tokens} new tokens exceeds "
-            f"max_len {self.max_len}")
+        if not prompt:
+            raise RequestRejected("empty prompt")
+        need = len(prompt) + max_new_tokens - 1
+        if need > self.max_len:
+            raise RequestRejected(
+                f"prompt {len(prompt)} + {max_new_tokens} new tokens "
+                f"exceeds max_len {self.max_len}")
+        if self.page_len and not self.kv.possible(need):
+            raise RequestRejected(
+                f"prompt {len(prompt)} + {max_new_tokens} new tokens needs "
+                f"more pages than the whole pool holds "
+                f"(page_len={self.page_len}); raise page_pool_tokens")
         req = Request(rid=self._next_rid, prompt=prompt,
                       max_new_tokens=max_new_tokens, arrival=arrival,
-                      temperature=temperature, seed=seed)
+                      temperature=temperature, seed=seed, top_k=top_k)
         if temperature > 0:
             self._use_sampling = True
+        if top_k is not None and top_k != self.top_k_default:
+            self._use_topk_vec = True
         self._next_rid += 1
         self.requests.append(req)
         self.scheduler.submit(req)
@@ -215,9 +282,13 @@ class ServeEngine:
     def _decode(self, tok: jnp.ndarray, pos: jnp.ndarray):
         packed = self.packed.blocks if self.packed is not None else None
         kw = dict(lm_weight=self.lm_weight, packed=packed)
+        if self.page_len:
+            kw["page_tables"] = self.kv.tables()
         if self._use_sampling:
             kw.update(sample_keys=jnp.asarray(self._keys),
                       temperature=jnp.asarray(self._temp))
+            if self._use_topk_vec:
+                kw["top_ks"] = jnp.asarray(self._topk)
         if self.cfg.frontend == "frames":
             # device-side frame embeddings: fold the step counter into a
             # carried key — no host RNG (and no host sync) in the hot loop
@@ -258,11 +329,24 @@ class ServeEngine:
         for r in self.scheduler.waiting:
             if r.arrival <= now and r.t_due is None:
                 r.t_due = self._wall()
-        for slot, req in self.scheduler.admit(now):
-            self.kv.reset_slot(slot)
+        fits = None
+        if self.page_len:
+            # out-of-pages: the head-of-line request queues (strict FIFO)
+            # until retirements free enough pages — never a crash.  The
+            # gate *reserves* (check-and-commit), so multiple admissions
+            # in one pass can't over-commit the pool.
+            fits = lambda r: self.kv.reserve(
+                len(r.prompt) + r.max_new_tokens - 1)
+        for slot, req in self.scheduler.admit(now, fits=fits):
+            if self.page_len:
+                self.kv.admit(slot, len(req.prompt) + req.max_new_tokens - 1)
+            else:
+                self.kv.reset_slot(slot)
             self._pos[slot] = 0
             self._tok[slot] = req.prompt[0]
             self._temp[slot] = req.temperature
+            self._topk[slot] = (req.top_k if req.top_k is not None
+                                else self.top_k_default)
             rseed = req.seed if req.seed is not None \
                 else self._seed + 0x9e37 * (req.rid + 1)
             self._keys[slot] = np.asarray(jax.random.PRNGKey(rseed))
@@ -270,6 +354,10 @@ class ServeEngine:
             if req.t_due is None:
                 req.t_due = self._wall()
 
+        if self.page_len:
+            # map each active slot's current write page before it decodes
+            for slot in self.scheduler.active:
+                self.kv.ensure(slot, int(self._pos[slot]))
         nxt, _, cache = self._decode(jnp.asarray(self._tok[:, None]),
                                      jnp.asarray(self._pos))
         self.kv.cache = cache
@@ -294,8 +382,11 @@ class ServeEngine:
                 req.t_done = wall
                 req.done_step = self._steps
                 self.scheduler.release(slot)
+                if self.page_len:
+                    self.kv.retire(slot)   # pages back to the free list
                 self._pos[slot] = 0
                 self._temp[slot] = 0.0     # freed slots decode greedy
+                self._topk[slot] = 0
         self._steps += 1
 
     def run(self) -> dict:
@@ -354,6 +445,16 @@ class ServeEngine:
                            if r.first_token_s is not None])
         occ = (self._active_slot_steps / (self._steps * self.num_slots)
                if self._steps else 0.0)
+        if self.page_len:
+            positions = [int(self._pos[s]) for s in self.scheduler.active]
+            paging = {"paged": True, "fallback": None,
+                      **self.kv.report(positions)}
+        else:
+            reserved = self.kv.reserved_kv_bytes()
+            paging = {"paged": False, "fallback": self.paging_fallback,
+                      "reserved_kv_bytes": reserved,
+                      "contiguous_kv_bytes": reserved,
+                      "reserved_reduction": 1.0}
         return {
             "requests": len(done),
             "generated_tokens": gen,
@@ -367,5 +468,6 @@ class ServeEngine:
             "head_compression": self.head_compression,
             "head_fallback": self.head_fallback,
             "weight_stream": self.weight_stream_report(),
+            "paging": paging,
             "cache_resets": self.kv.resets,
         }

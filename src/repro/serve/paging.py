@@ -1,0 +1,282 @@
+"""Paged KV-cache subsystem: page pools, a free-list allocator, and
+per-slot page tables for the serving engine.
+
+The contiguous ``SlotKVCache`` reserves worst-case ``num_slots × max_len``
+KV lines per attention leaf for the engine's lifetime, so short requests
+pay long-request storage.  This module regularises that last irregular
+consumer the same way the paper's SIDR regularises sparse operand
+fetches — into fixed-size shared units gathered through an index:
+
+* each attention block gets a **pool** of physical pages, shape
+  ``(P, pool_pages, page_len, Hkv, hd)`` (axis 0 is the period stack, so
+  one logical page id covers all periods of the block);
+* each batch slot gets a **page table** of ``page_slots =
+  ceil(capacity / page_len)`` int32 entries per pool (capacity is
+  window-bounded for sliding-window blocks), mapping logical token slots
+  onto physical pages;
+* a host-side **free-list allocator** hands out pages lazily as a slot's
+  position advances and takes them back when the request retires — the
+  pool (what is actually reserved) scales with *live tokens*, not
+  ``num_slots × max_len``.
+
+Physical page 0 of every pool is a reserved **trash page**: unmapped
+table entries point at it, so idle batch slots — which still execute the
+decode step's cache write at position 0 — scribble into the trash line
+instead of someone else's live page, and gathers of not-yet-written
+logical pages read garbage that the attention validity mask always
+excludes.  Pages therefore never need zeroing between requests; only the
+O(1)-per-slot recurrent (SSM/RWKV) state is zeroed on admission.
+
+Admission is commitment-based so allocation can never fail mid-flight:
+a request commits its worst-case page count per pool
+(``ceil((len(prompt) + max_new_tokens - 1) / page_len)``, ring-capped at
+``page_slots``) when admitted, and the engine only admits while every
+pool has ``committed + candidate <= pool_pages``.  Since a slot never
+maps more pages than it committed, the free list is provably non-empty
+whenever ``ensure`` needs a page (tests/test_paging.py property-checks
+this along with no-double-free, no cross-slot aliasing and free-list
+conservation).  Out-of-pages is thus an *admission* condition — the
+request waits in the queue until retirements free pages — never a crash.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.model import (attn_capacity, init_cache,
+                                paged_addressing, paged_layout)
+
+
+@dataclasses.dataclass
+class PagePool:
+    """Host-side allocator state for one attention block's page pool."""
+
+    bname: str
+    capacity: int          # per-slot logical capacity in tokens (no pad)
+    page_slots: int        # page-table width = ceil(capacity / page_len)
+    pool_pages: int        # allocatable data pages (trash page excluded)
+    window: Optional[int]  # sliding-window size (None = full attention)
+    ring: bool             # sliding-window ring addressing (mod capacity)
+    line_bytes: int        # K+V bytes of one token line across periods
+    free: List[int] = dataclasses.field(default_factory=list)
+    table: Optional[np.ndarray] = None   # (num_slots, page_slots) int32
+    committed: int = 0     # admission-reserved worst-case pages
+    in_use: int = 0
+    peak: int = 0
+
+
+class PagedKVCache:
+    """Drop-in cache manager for ``ServeEngine`` with paged attention KV.
+
+    Mirrors ``SlotKVCache``'s surface (``cache``, ``resets``, ``warmup``)
+    and adds the allocator: ``possible``/``fits`` for admission control,
+    ``admit``/``ensure``/``retire`` for the page lifecycle, ``tables()``
+    for the per-step jit argument, and ``report()`` for the paging
+    section of the engine report.
+
+    ``pool_tokens`` bounds each pool to ``ceil(pool_tokens / page_len)``
+    data pages (capped at the worst case ``num_slots * page_slots``);
+    default is the worst case, which still allocates lazily but can
+    always admit whatever the contiguous cache could.
+    """
+
+    def __init__(self, cfg: ModelConfig, num_slots: int, max_len: int,
+                 page_len: int, pool_tokens: Optional[int] = None):
+        assert page_len > 0
+        layout = paged_layout(cfg, max_len, page_len)
+        if not layout:
+            raise ValueError(f"{cfg.name}: no attention blocks to page")
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.page_len = page_len
+        self.resets = 0
+
+        kv_line = (2 * cfg.num_periods * cfg.num_kv_heads
+                   * cfg.resolved_head_dim
+                   * jnp.dtype(cfg.compute_dtype).itemsize)
+        budget = (-(-pool_tokens // page_len)
+                  if pool_tokens is not None else None)
+        self.pools: Dict[str, PagePool] = {}
+        for i, blk in enumerate(cfg.pattern):
+            bname = f"b{i}"
+            if bname not in layout:
+                continue
+            slots = layout[bname]
+            _, ring = paged_addressing(slots, page_len, blk.window)
+            worst = num_slots * slots
+            pages = worst if budget is None else max(1, min(budget, worst))
+            pool = PagePool(
+                bname=bname, capacity=attn_capacity(blk, max_len),
+                page_slots=slots, pool_pages=pages, window=blk.window,
+                ring=ring, line_bytes=kv_line)
+            # page ids 1..pool_pages; id 0 is the trash page
+            pool.free = list(range(pages, 0, -1))
+            pool.table = np.zeros((num_slots, slots), np.int32)
+            self.pools[bname] = pool
+
+        pool_pages = {b: p.pool_pages + 1 for b, p in self.pools.items()}
+        self.cache = init_cache(cfg, num_slots, max_len, page_len=page_len,
+                                pool_pages=pool_pages)
+        self._commit: List[Dict[str, int]] = [
+            {} for _ in range(num_slots)]
+        # device-side table cache: mappings change on a handful of steps
+        # per request (admit / page boundary / retire), so the hot decode
+        # loop reuses one upload until a mutation invalidates it
+        self._dev_tables: Optional[Dict[str, jnp.ndarray]] = None
+        # jitted donated reset for the slotted (non-paged) leaves only:
+        # recurrent state is zeroed per admission, page pools never are
+        # (the k/v leaves of paged blocks pass through untouched; any
+        # slotted sibling leaf — e.g. cm_x_prev — still zeroes its line)
+        paged_names = set(self.pools)
+
+        def _reset_fn(cache, slot):
+            return {b: {k: (v if (b in paged_names and k in ("k", "v"))
+                            else v.at[:, slot].set(0))
+                        for k, v in leaf.items()}
+                    for b, leaf in cache.items()}
+
+        self._reset = jax.jit(_reset_fn, donate_argnums=(0,))
+
+    # ------------------------------------------------------- admission ----
+
+    def pages_for(self, need_tokens: int) -> Dict[str, int]:
+        """Worst-case pages per pool for a request touching positions
+        ``0 .. need_tokens-1`` (ring pools cap at their table width)."""
+        n = -(-max(need_tokens, 1) // self.page_len)
+        return {b: min(n, p.page_slots) for b, p in self.pools.items()}
+
+    def possible(self, need_tokens: int) -> bool:
+        """Can this request ever be admitted (empty engine)?"""
+        return all(n <= self.pools[b].pool_pages
+                   for b, n in self.pages_for(need_tokens).items())
+
+    def fits(self, need_tokens: int) -> bool:
+        """Can this request be admitted *now* without risking mid-flight
+        page exhaustion for anyone already committed?"""
+        return all(self.pools[b].committed + n <= self.pools[b].pool_pages
+                   for b, n in self.pages_for(need_tokens).items())
+
+    def reserve(self, need_tokens: int) -> bool:
+        """Check-and-commit in one step — the scheduler's admission gate.
+
+        Commits the worst-case pages immediately on success, so several
+        admissions in one scheduler pass can't all pass a stale check
+        and over-commit the pool.  ``admit`` then binds the reservation
+        to its slot without counting it again.
+        """
+        if not self.fits(need_tokens):
+            return False
+        for b, n in self.pages_for(need_tokens).items():
+            self.pools[b].committed += n
+        return True
+
+    def admit(self, slot: int, need_tokens: int) -> None:
+        """Bind a prior ``reserve`` to its slot, zero the slot's
+        recurrent state, and map the first page (position 0 is written
+        on the admit step)."""
+        assert 0 <= slot < self.num_slots
+        assert not self._commit[slot], f"slot {slot} not retired"
+        self._commit[slot] = self.pages_for(need_tokens)
+        self.cache = self._reset(self.cache, jnp.int32(slot))
+        self.resets += 1
+        self.ensure(slot, 0)
+
+    def ensure(self, slot: int, pos: int) -> None:
+        """Map the page holding ``pos``'s write slot, allocating lazily.
+
+        Shares the device-side addressing with ``_decode_attn`` through
+        ``models.model.paged_addressing``: ring pools write at
+        ``pos % cap``, others clip to the last slot.
+        """
+        for b, pool in self.pools.items():
+            cap, ring = paged_addressing(pool.page_slots, self.page_len,
+                                         pool.window)
+            wslot = pos % cap if ring else min(max(pos, 0), cap - 1)
+            pi = wslot // self.page_len
+            if pool.table[slot, pi] == 0:
+                assert pool.free, (
+                    f"{b}: free list empty with {pool.committed} committed "
+                    f"of {pool.pool_pages} — commitment invariant broken")
+                pool.table[slot, pi] = pool.free.pop()
+                pool.in_use += 1
+                pool.peak = max(pool.peak, pool.in_use)
+                self._dev_tables = None
+
+    def retire(self, slot: int) -> None:
+        """Return the slot's pages to the free list and uncommit."""
+        self._dev_tables = None
+        for b, pool in self.pools.items():
+            row = pool.table[slot]
+            mapped = [int(p) for p in row[row != 0]]
+            assert not set(mapped) & set(pool.free), "double free"
+            pool.free.extend(mapped)
+            pool.in_use -= len(mapped)
+            row[:] = 0
+            pool.committed -= self._commit[slot].get(b, 0)
+        self._commit[slot] = {}
+
+    # ------------------------------------------------------------ step ----
+
+    def tables(self) -> Dict[str, jnp.ndarray]:
+        """Per-step jit argument: the current page tables, device-side
+        (uploaded only after a mapping actually changed)."""
+        if self._dev_tables is None:
+            self._dev_tables = {b: jnp.asarray(p.table)
+                                for b, p in self.pools.items()}
+        return self._dev_tables
+
+    def warmup(self) -> None:
+        """Compile the slotted-state reset executable."""
+        self.cache = self._reset(self.cache, jnp.int32(0))
+
+    # --------------------------------------------------------- reports ----
+
+    def reserved_kv_bytes(self) -> int:
+        """Bytes actually reserved for KV pages (trash pages included)."""
+        return sum((p.pool_pages + 1) * self.page_len * p.line_bytes
+                   for p in self.pools.values())
+
+    def contiguous_kv_bytes(self) -> int:
+        """What the contiguous layout would reserve for the same engine."""
+        return sum(self.num_slots * p.capacity * p.line_bytes
+                   for p in self.pools.values())
+
+    def report(self, positions: Optional[Sequence[int]] = None) -> Dict:
+        """Paging stats: pages in use / peak / total, reserved vs
+        contiguous modeled cache-HBM bytes, and — given the active slots'
+        current positions — internal fragmentation (allocated-but-dead
+        fraction of in-use page tokens)."""
+        in_use = sum(p.in_use for p in self.pools.values())
+        total = sum(p.pool_pages for p in self.pools.values())
+        reserved = self.reserved_kv_bytes()
+        contiguous = self.contiguous_kv_bytes()
+        frag = None
+        if positions is not None:
+            alloc_tokens = live_tokens = 0
+            for p in self.pools.values():
+                alloc_tokens += p.in_use * self.page_len
+                live_tokens += sum(min(pos + 1, p.capacity)
+                                   for pos in positions)
+            frag = (1.0 - live_tokens / alloc_tokens if alloc_tokens
+                    else 0.0)
+        return {
+            "page_len": self.page_len,
+            "pages_in_use": in_use,
+            "pages_peak": sum(p.peak for p in self.pools.values()),
+            "pages_total": total,
+            "pools": {b: {"pages": p.pool_pages, "in_use": p.in_use,
+                          "peak": p.peak, "page_slots": p.page_slots,
+                          "ring": p.ring}
+                      for b, p in self.pools.items()},
+            "reserved_kv_bytes": reserved,
+            "contiguous_kv_bytes": contiguous,
+            "reserved_reduction": (contiguous / reserved if reserved
+                                   else 1.0),
+            "fragmentation": frag,
+        }

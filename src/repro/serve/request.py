@@ -12,6 +12,18 @@ import enum
 from typing import List, Optional, Sequence
 
 
+class RequestRejected(ValueError):
+    """A request the engine can *never* serve (empty prompt, or a
+    prompt + budget that exceeds ``max_len`` / the whole page pool).
+
+    Typed so serving processes can refuse one oversized request and keep
+    running — the old ``assert`` killed the process.  Requests that
+    merely have to wait for capacity (a full batch, or an exhausted page
+    pool under paging) are never rejected; they queue until slots or
+    pages free up.
+    """
+
+
 class RequestState(enum.Enum):
     WAITING = "waiting"     # submitted, not yet admitted to a slot
     ACTIVE = "active"       # owns a batch slot, decoding
@@ -27,6 +39,8 @@ class Request:
     temperature: float = 0.0        # 0 = greedy; > 0 samples logits / T
     seed: Optional[int] = None      # per-request sampling stream (None:
     #                                 engine derives one from the rid)
+    top_k: Optional[int] = None     # per-request top-k truncation (None:
+    #                                 engine default; 0 = no truncation)
 
     # -- filled in by the engine --
     tokens: List[int] = dataclasses.field(default_factory=list)

@@ -33,14 +33,23 @@ class SlotScheduler:
         req.state = RequestState.WAITING
         self.waiting.append(req)
 
-    def admit(self, now: float) -> List[Tuple[int, Request]]:
-        """Move due requests into free slots, FIFO by (arrival, rid)."""
+    def admit(self, now: float, fits=None) -> List[Tuple[int, Request]]:
+        """Move due requests into free slots, FIFO by (arrival, rid).
+
+        ``fits(req) -> bool`` is an optional capacity gate (the paged
+        engine's out-of-pages check).  Admission stays strictly FIFO: a
+        head-of-line request that doesn't fit *blocks* later requests
+        rather than being skipped, preserving the no-starvation property
+        — it waits in the queue until retirements free capacity.
+        """
         admitted = []
         while self.free:
             due = [r for r in self.waiting if r.arrival <= now]
             if not due:
                 break
             req = min(due, key=lambda r: (r.arrival, r.rid))
+            if fits is not None and not fits(req):
+                break
             self.waiting.remove(req)
             slot = self.free.popleft()
             self.active[slot] = req

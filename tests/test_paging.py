@@ -1,0 +1,213 @@
+"""Paged KV cache: paged-vs-contiguous token equivalence, allocator
+invariants (property-tested via the offline hypothesis shim), graceful
+out-of-pages admission, typed rejection, per-request top_k."""
+import warnings
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_smoke_config
+from repro.serve import (PagedKVCache, RequestRejected, ServeEngine,
+                         poisson_trace)
+
+
+def _run_tokens(cfg, *, sparsity, trace, **engine_kw):
+    eng = ServeEngine(cfg, num_slots=2, max_len=32, sparsity=sparsity,
+                      seed=0, **engine_kw)
+    reqs = [eng.submit(**spec) for spec in trace]
+    eng.run()
+    return [r.tokens for r in reqs], eng
+
+
+def _mixed_trace(cfg, n=6):
+    """Mixed request lengths: prompts 1..4, budgets 3..12 tokens."""
+    return poisson_trace(n, rate=0.7, seed=2, vocab_size=cfg.vocab_size,
+                         prompt_len=(1, 4), max_new=(3, 12))
+
+
+# ------------------------------------------------------- equivalence -------
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "gemma3-4b",
+                                  "granite-moe-3b-a800m"])
+@pytest.mark.parametrize("sparsity", [0.0, 0.75])
+def test_paged_matches_contiguous_tokens(arch, sparsity):
+    """The paged engine is token-identical to the contiguous engine on
+    identical mixed-length traces — across full attention, sliding
+    windows (gemma3's local blocks ring through pages) and MoE, pruned
+    or not.  page_len divides both max_len and the smoke window, so the
+    gathered page view reconstructs the contiguous cache bit-for-bit."""
+    cfg = get_smoke_config(arch)
+    trace = _mixed_trace(cfg)
+    cont, _ = _run_tokens(cfg, sparsity=sparsity, trace=trace)
+    paged, eng = _run_tokens(cfg, sparsity=sparsity, trace=trace,
+                             paged=True, page_len=8)
+    assert paged == cont
+    assert all(toks for toks in paged)
+    assert eng.report()["paging"]["paged"] is True
+
+
+def test_tight_pool_queues_and_still_matches():
+    """A pool far below worst case forces out-of-pages queueing; every
+    request still completes with the same tokens as the contiguous
+    engine (greedy decode is schedule-invariant per request)."""
+    cfg = get_smoke_config("olmo-1b")
+    trace = _mixed_trace(cfg)
+    cont, _ = _run_tokens(cfg, sparsity=0.0, trace=trace)
+    paged, eng = _run_tokens(cfg, sparsity=0.0, trace=trace, paged=True,
+                             page_len=8, page_pool_tokens=16)
+    assert paged == cont
+    pg = eng.report()["paging"]
+    assert pg["pages_total"] == 2 and pg["pages_peak"] <= 2
+    assert pg["pages_in_use"] == 0          # drained: all pages freed
+
+
+# ------------------------------------------------ admission / rejection ----
+
+
+def test_oversized_request_raises_typed_error():
+    """submit() must reject (typed) instead of assert-killing the
+    process, and the engine must keep serving afterwards."""
+    cfg = get_smoke_config("olmo-1b")
+    eng = ServeEngine(cfg, num_slots=2, max_len=16, seed=0)
+    with pytest.raises(RequestRejected):
+        eng.submit([1] * 4, max_new_tokens=16)
+    with pytest.raises(RequestRejected):
+        eng.submit([], max_new_tokens=2)
+    req = eng.submit([1], max_new_tokens=3)
+    eng.run()
+    assert len(req.tokens) == 3
+
+
+def test_impossible_page_need_rejected_queueable_need_queued():
+    """Larger-than-pool requests are rejected at submit; pool-sized
+    requests queue through out-of-pages instead of crashing."""
+    cfg = get_smoke_config("olmo-1b")
+    eng = ServeEngine(cfg, num_slots=4, max_len=32, seed=0, paged=True,
+                      page_len=8, page_pool_tokens=16)
+    with pytest.raises(RequestRejected):
+        eng.submit([1], max_new_tokens=32)   # needs 4 pages, pool holds 2
+    reqs = [eng.submit([1, 2], max_new_tokens=10) for _ in range(4)]
+    eng.run()
+    assert all(len(r.tokens) == 10 for r in reqs)
+    # 2 pages per request, 2-page pool: admissions were serialised
+    admits = sorted(r.admit_step for r in reqs)
+    assert admits == sorted(set(admits)), "requests ran concurrently " \
+        "despite the pool only fitting one"
+
+
+def test_no_attn_arch_falls_back_with_reason():
+    cfg = get_smoke_config("rwkv6-3b")
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        eng = ServeEngine(cfg, num_slots=2, max_len=16, seed=0, paged=True)
+    assert eng.page_len == 0
+    assert "no attention blocks" in eng.paging_fallback
+    assert any("contiguous" in str(w.message) for w in caught)
+    req = eng.submit([1], max_new_tokens=3)
+    eng.run()
+    assert len(req.tokens) == 3
+    assert eng.report()["paging"]["paged"] is False
+
+
+# ------------------------------------------------- allocator properties ----
+
+
+def _check_invariants(kv):
+    for b, pool in kv.pools.items():
+        mapped = pool.table[pool.table != 0]
+        # no double allocation: every mapped page id is unique...
+        assert len(set(mapped.tolist())) == len(mapped), \
+            f"{b}: page aliased across slots"
+        # ...and disjoint from the free list (no double free)
+        assert not set(mapped.tolist()) & set(pool.free), \
+            f"{b}: page both mapped and free"
+        # conservation: free + mapped == pool, ids in [1, pool_pages]
+        assert len(pool.free) + len(mapped) == pool.pool_pages, \
+            f"{b}: pages leaked"
+        assert pool.in_use == len(mapped)
+        if len(mapped):
+            assert mapped.min() >= 1 and mapped.max() <= pool.pool_pages
+        # commitment never exceeds the pool
+        assert 0 <= pool.committed <= pool.pool_pages
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(1, 30), min_size=1, max_size=12),
+       st.integers(8, 64), st.sampled_from([4, 8, 16]))
+def test_allocator_invariants_under_random_load(needs, pool_tokens,
+                                                page_len):
+    """No double-free, no cross-slot page aliasing, free-list
+    conservation — under random request sizes, pool budgets and page
+    sizes, with full admit/ensure/retire lifecycles."""
+    cfg = get_smoke_config("gemma3-4b")   # windowed + global blocks
+    kv = PagedKVCache(cfg, num_slots=3, max_len=32, page_len=page_len,
+                      pool_tokens=pool_tokens)
+    # drop requests the pool can never hold (engine rejects those typed)
+    needs = [n for n in needs if kv.possible(n)]
+    active = {}                            # slot -> [next position, need]
+    free_slots = [0, 1, 2]
+    guard = 0
+    while (needs or active) and guard < 500:
+        guard += 1
+        for slot, (pos, need) in list(active.items()):
+            if pos >= need:                # all positions written: retire
+                kv.retire(slot)
+                free_slots.append(slot)
+                del active[slot]
+        while needs and free_slots:
+            need = needs[0]
+            if not kv.reserve(need):       # out of pages: head queues
+                break
+            needs.pop(0)
+            slot = free_slots.pop()
+            kv.admit(slot, need)
+            active[slot] = [0, need]
+        for slot in list(active):
+            pos, need = active[slot]
+            kv.ensure(slot, pos)
+            active[slot][0] = pos + 1
+        _check_invariants(kv)
+    assert not needs and not active, "allocator stalled under load"
+    for pool in kv.pools.values():
+        assert pool.in_use == 0 and pool.committed == 0
+        assert len(pool.free) == pool.pool_pages
+
+
+# ---------------------------------------------------- per-request top_k ----
+
+
+def test_per_request_top_k_mixes_in_one_batch():
+    """top_k is per-slot inside the jitted sampler: a top_k=1 sampled
+    request is exactly greedy while a wider request (same seed) samples,
+    in the same batch, with the engine default still honoured."""
+    cfg = get_smoke_config("olmo-1b")
+
+    def run():
+        eng = ServeEngine(cfg, num_slots=3, max_len=32, seed=0, top_k=4)
+        g = eng.submit([5], max_new_tokens=6)
+        k1 = eng.submit([5], max_new_tokens=6, temperature=1.0, seed=7,
+                        top_k=1)
+        kd = eng.submit([5], max_new_tokens=6, temperature=1.0, seed=7)
+        eng.run()
+        return g.tokens, k1.tokens, kd.tokens
+
+    g, k1, kd = run()
+    assert k1 == g                     # top-1 sampling == argmax
+    assert kd != g                     # engine-default k=4 really samples
+    assert run() == (g, k1, kd)        # deterministic per-request streams
+
+
+def test_top_k_zero_override_disables_engine_default():
+    cfg = get_smoke_config("olmo-1b")
+    eng = ServeEngine(cfg, num_slots=2, max_len=32, seed=0, top_k=1)
+    full = eng.submit([5], max_new_tokens=8, temperature=1.5, seed=3,
+                      top_k=0)          # explicit 0: full distribution
+    trunc = eng.submit([5], max_new_tokens=8, temperature=1.5, seed=3)
+    eng.run()
+    g = ServeEngine(cfg, num_slots=1, max_len=32, seed=0)
+    greedy = g.submit([5], max_new_tokens=8)
+    g.run()
+    assert trunc.tokens == greedy.tokens   # default k=1 == greedy
+    assert full.tokens != greedy.tokens    # k=0 samples the full dist
