@@ -22,4 +22,9 @@ PYTHONPATH=src python benchmarks/paged_serving.py --smoke \
     --page-lens 8 --slots 2 --requests 8 --max-len 128 --repeats 2 \
     --out BENCH_serve.json
 
+echo "== bench smoke: chunked prefill -> BENCH_serve.json (prefill) =="
+PYTHONPATH=src python benchmarks/prefill.py --smoke \
+    --chunks 8 --slots 2 --requests 6 --max-len 64 --repeats 2 \
+    --out BENCH_serve.json
+
 echo "CI OK"

@@ -28,7 +28,7 @@ from repro.launch.hlo_counters import analyze as hlo_analyze  # noqa: E402
 from repro.launch.mesh import make_production_mesh, mesh_tag  # noqa: E402
 from repro.launch.specs import (decode_input_specs,         # noqa: E402
                                 train_batch_specs)
-from repro.launch.steps import (build_prefill_step,         # noqa: E402
+from repro.launch.steps import (build_prefill_logits_step,  # noqa: E402
                                 build_serve_step, build_train_step)
 from repro.models.model import param_structs                # noqa: E402
 from repro.train.optimizer import OptConfig                 # noqa: E402
@@ -66,7 +66,7 @@ def lower_cell(arch: str, shape_name: str, mesh, *,
                 donate_argnums=(0, 1),
             ).lower(params, _opt_structs(cfg), batch)
     elif shape.kind == "prefill":
-        step = build_prefill_step(cfg)
+        step = build_prefill_logits_step(cfg)
         batch = train_batch_specs(cfg, shape)
         batch.pop("targets")
         bspec_fn = shd.batch_specs(cfg, mesh, shape.global_batch)

@@ -62,6 +62,7 @@ def serve_trace(arch: str, smoke: bool = True, slots: int = 4,
                 temperature: float = 0.0, top_k: int = 0,
                 paged: bool = False, page_len: int = 16,
                 page_pool_tokens: int | None = None,
+                prefill_chunk: int = 0,
                 verbose: bool = True) -> dict:
     """Continuous-batching mode: seeded Poisson arrivals into the engine.
 
@@ -74,6 +75,10 @@ def serve_trace(arch: str, smoke: bool = True, slots: int = 4,
     ``paged`` pages the KV cache into ``page_len``-token pages
     (``page_pool_tokens`` bounds each pool; out-of-pages admissions
     queue) — tokens are identical to the contiguous cache.
+    ``prefill_chunk`` > 0 ingests prompts through batched
+    ``prefill_chunk``-token prefill calls instead of teacher-forcing
+    them one token per decode step (0 = the legacy walk); tokens are
+    identical either way.
     """
     eng = ServeEngine.from_arch(arch, smoke=smoke, num_slots=slots,
                                 max_len=max_len, sparsity=sparsity,
@@ -82,7 +87,8 @@ def serve_trace(arch: str, smoke: bool = True, slots: int = 4,
                                 stream_weights=stream_weights,
                                 bitmap_head=stream_weights, top_k=top_k,
                                 paged=paged, page_len=page_len,
-                                page_pool_tokens=page_pool_tokens)
+                                page_pool_tokens=page_pool_tokens,
+                                prefill_chunk=prefill_chunk)
     prompt_len = (1, min(4, max_len))
     hi = max(1, min(max_new[1], max_len - prompt_len[1] + 1))
     lo = max(1, min(max_new[0], hi))
@@ -105,6 +111,17 @@ def serve_trace(arch: str, smoke: bool = True, slots: int = 4,
         if sparsity > 0:
             print(f"serving at {eng.weight_sparsity:.2%} weight sparsity "
                   f"(head compression {eng.head_compression:.2f}x)")
+        pf = rep["prefill"]
+        if pf["enabled"]:
+            tt = rep["ttft"]
+            print(f"prefill: {pf['calls']} chunk calls ({pf['chunk']} "
+                  f"tokens) over {pf['prefill_steps']} prefill + "
+                  f"{pf['decode_steps']} decode steps | TTFT split p50 "
+                  f"queue {tt['queue_s']['p50'] * 1e3:.1f}ms / prefill "
+                  f"{tt['prefill_s']['p50'] * 1e3:.1f}ms / first decode "
+                  f"{tt['first_decode_s']['p50'] * 1e3:.1f}ms")
+        elif pf["fallback"]:
+            print(f"  prefill fallback: {pf['fallback']}")
         lat, ftl = rep["latency_s"], rep["first_token_s"]
         pg = rep["paging"]
         if pg["paged"]:
@@ -157,6 +174,10 @@ def main():
                     help="bound each page pool to this many tokens "
                          "(default: worst case; smaller pools queue "
                          "admissions when pages run out)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="ingest prompts in batched chunks of this many "
+                         "tokens per prefill call (0 = legacy teacher-"
+                         "forcing through decode steps)")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -168,6 +189,7 @@ def main():
                 temperature=args.temperature, top_k=args.top_k,
                 paged=args.paged, page_len=args.page_len,
                 page_pool_tokens=args.page_pool_tokens,
+                prefill_chunk=args.prefill_chunk,
                 seed=args.seed, model_parallel=args.model_parallel)
 
 

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
 from repro.models.model import (decode_step, forward, lm_head_weight,
-                                lm_loss, loss_fn)
+                                lm_loss, loss_fn, prefill_hidden)
 from repro.train import optimizer as opt_lib
 
 
@@ -80,19 +80,53 @@ def build_eval_step(cfg: ModelConfig) -> Callable:
     return eval_step
 
 
-def build_prefill_step(cfg: ModelConfig) -> Callable:
+def build_prefill_logits_step(cfg: ModelConfig) -> Callable:
     """Forward over the full prompt; returns last-position logits.
 
-    (KV export is intentionally omitted from the dry-run cell — see
-    DESIGN.md; the prefill cell measures the forward compute.)
+    The *dry-run* prefill cell: it measures the forward compute and
+    intentionally omits KV export (see DESIGN.md).  The serving engine's
+    cache-writing chunked prefill is ``build_prefill_step`` below.
     """
 
-    def prefill_step(params, batch):
+    def prefill_logits_step(params, batch):
         hidden = forward(params, cfg, tokens=batch.get("tokens"),
                          embeds=batch.get("embeds"))
         w = lm_head_weight(params, cfg).astype(hidden.dtype)
         logits = (hidden[:, -1] @ w).astype(jnp.float32)
         return logits
+
+    return prefill_logits_step
+
+
+def build_prefill_step(cfg: ModelConfig, impl: Optional[str] = None
+                       ) -> Callable:
+    """One chunked-prefill call for the serving engine:
+    (params, cache, tokens, pos, lens) -> (hidden, new_cache).
+
+    ``tokens`` is a (B, C) chunk batch — one C-token slice of prompt per
+    batch slot, assembled by ``repro.serve.prefill.PrefillPlanner`` from
+    however many admitted requests are mid-prefill.  ``pos`` ((B,) int32)
+    is each slot's chunk start position and ``lens`` ((B,) int32) its
+    valid token count this call (0 = padding lane: the slot writes
+    nothing).  The call writes C KV lines per participating slot —
+    causal within the chunk, attending to the slot's existing cache — so
+    a prompt is ingested in ``ceil((len(prompt) - 1) / C)`` calls
+    instead of ``len(prompt) - 1`` full-batch decode steps, with every
+    projection dispatched at M = C through the packed
+    ``matmul_or_bitmap`` path (``packed`` / ``lm_weight`` mirror
+    ``build_serve_step``; there is no LM head here — the first sampled
+    token comes from the first real decode step after prefill).
+
+    ``page_tables`` routes the KV writes through the paged layout; the
+    engine bulk-maps the chunk's pages (``PagedKVCache.ensure_range``)
+    before the call.
+    """
+
+    def prefill_step(params, cache, tokens, pos, lens, embeds=None,
+                     packed=None, page_tables=None):
+        return prefill_hidden(params, cache, cfg, tokens, pos, lens,
+                              embeds=embeds, packed=packed, impl=impl,
+                              page_tables=page_tables)
 
     return prefill_step
 

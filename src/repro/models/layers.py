@@ -216,7 +216,8 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 
 def paged_kv_update(k_pool: jax.Array, v_pool: jax.Array, k: jax.Array,
                     v: jax.Array, page_table: jax.Array,
-                    write_slot: jax.Array
+                    write_slot: jax.Array,
+                    valid: Optional[jax.Array] = None
                     ) -> tuple[jax.Array, jax.Array]:
     """Write one decode step's K/V lines through a page table.
 
@@ -229,14 +230,49 @@ def paged_kv_update(k_pool: jax.Array, v_pool: jax.Array, k: jax.Array,
     position 0) resolve to page 0 and scribble into the trash line —
     live pages are only ever written by the slot that owns them, so
     distinct rows never collide outside the trash page.
+
+    ``valid`` ((B,) bool) additionally routes masked-off rows to the
+    trash page — chunked prefill runs a fixed-width batch where slots
+    past their chunk length must not touch live pages.
     """
     page_len = k_pool.shape[1]
     pi = write_slot // page_len
     off = write_slot % page_len
     phys = jnp.take_along_axis(page_table, pi[:, None], axis=1)[:, 0]
+    if valid is not None:
+        phys = jnp.where(valid, phys, 0)
     k_pool = k_pool.at[phys, off].set(k[:, 0].astype(k_pool.dtype))
     v_pool = v_pool.at[phys, off].set(v[:, 0].astype(v_pool.dtype))
     return k_pool, v_pool
+
+
+def slot_kv_update(k_cache: jax.Array, v_cache: jax.Array, k: jax.Array,
+                   v: jax.Array, write_slot: jax.Array,
+                   valid: Optional[jax.Array] = None
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Write one K/V line per batch row into the contiguous slotted cache.
+
+    k_cache/v_cache: (B, C, Hkv, D); k/v: (B, 1, Hkv, D); write_slot: (B,)
+    cache line per row.  ``valid`` ((B,) bool) drops masked-off rows from
+    the scatter entirely (the contiguous layout has no trash line, so
+    chunked prefill's padding lanes redirect out of bounds and are
+    dropped) — decode's unconditional write passes no mask and keeps its
+    exact scatter.
+    """
+    b = k_cache.shape[0]
+    bidx = jnp.arange(b)
+    if valid is None:
+        k_cache = k_cache.at[bidx, write_slot].set(
+            k[:, 0].astype(k_cache.dtype))
+        v_cache = v_cache.at[bidx, write_slot].set(
+            v[:, 0].astype(v_cache.dtype))
+        return k_cache, v_cache
+    slot = jnp.where(valid, write_slot, k_cache.shape[1])   # OOB when masked
+    k_cache = k_cache.at[bidx, slot].set(
+        k[:, 0].astype(k_cache.dtype), mode="drop")
+    v_cache = v_cache.at[bidx, slot].set(
+        v[:, 0].astype(v_cache.dtype), mode="drop")
+    return k_cache, v_cache
 
 
 def paged_gather(pool: jax.Array, page_table: jax.Array) -> jax.Array:

@@ -462,17 +462,164 @@ def _decode_attn(p: Dict, x: jax.Array, cache: Dict, cfg: ModelConfig,
             # per-slot positions (continuous batching): each batch row
             # writes its own cache line, so the update is a batched scatter
             slot = (posv % c) if ring else jnp.clip(posv, 0, c - 1)
-            bidx = jnp.arange(b)
-            k_cache = cache["k"].at[bidx, slot].set(
-                k[:, 0].astype(cache["k"].dtype))
-            v_cache = cache["v"].at[bidx, slot].set(
-                v[:, 0].astype(cache["v"].dtype))
+            k_cache, v_cache = L.slot_kv_update(cache["k"], cache["v"],
+                                                k, v, slot)
         k_att, v_att = k_cache, v_cache
     o = L.decode_attention(q, k_att, v_att, pos, window=blk.window,
                            ring=ring)
     out = L.matmul_or_bitmap(o.reshape(b, 1, h * hd), p["wo"],
                              pk.get("wo"), impl)
     return out, {"k": k_cache, "v": v_cache}
+
+
+def _prefill_attn(p: Dict, x: jax.Array, cache: Dict, cfg: ModelConfig,
+                  blk: BlockCfg, pos: jax.Array, lens: jax.Array,
+                  packed: Optional[Dict] = None,
+                  impl: Optional[str] = None,
+                  page_table: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, Dict]:
+    """Chunked-prefill attention: C tokens per slot through one call.
+
+    x: (B, C, D) chunk hidden states; pos: (B,) start position of each
+    slot's chunk; lens: (B,) valid tokens this call (rows past their
+    length are padding lanes whose cache writes are masked off).
+
+    The q/k/v/o projections run batched over the whole chunk (M = B·C
+    rows through ``matmul_or_bitmap`` — where the compressed weight
+    stream amortizes), while the cache write + attention core scan the
+    chunk one token at a time.  Each inner step writes token t's K/V
+    line and then attends token t against the cache — exactly the state
+    the decode path would see at that position, so chunked prefill is
+    bit-identical to teacher-forcing the prompt through decode steps
+    (ring wraps, windows and paging included, with no layout-dependent
+    re-association of the softmax).
+    """
+    b, c_chunk, d = x.shape
+    hd = cfg.resolved_head_dim
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    pk = packed or {}
+    xn = L.norm(x, p.get("norm"), cfg.norm)
+    q = L.matmul_or_bitmap(xn, p["wq"], pk.get("wq"), impl).reshape(
+        b, c_chunk, h, hd)
+    k = L.matmul_or_bitmap(xn, p["wk"], pk.get("wk"), impl).reshape(
+        b, c_chunk, kv, hd)
+    v = L.matmul_or_bitmap(xn, p["wv"], pk.get("wv"), impl).reshape(
+        b, c_chunk, kv, hd)
+    if cfg.qk_norm:
+        q = L.norm(q, p["q_norm"], "rmsnorm")
+        k = L.norm(k, p["k_norm"], "rmsnorm")
+    posv = jnp.asarray(pos)
+    posb = posv[:, None] + jnp.arange(c_chunk)[None, :]      # (B, C)
+    q = L.rope(q, posb, cfg.rope_theta)
+    k = L.rope(k, posb, cfg.rope_theta)
+    if page_table is not None:
+        plen = cache["k"].shape[1]
+        cap, ring = paged_addressing(page_table.shape[1], plen, blk.window)
+    else:
+        cap = cache["k"].shape[1]
+        ring = blk.window is not None and cap == blk.window
+
+    def tok_step(carry, xs):
+        k_cache, v_cache = carry
+        q_t, k_t, v_t, t = xs                   # (B, H/Hkv, hd), scalar t
+        pos_t = posv + t
+        valid = t < lens
+        slot = (pos_t % cap) if ring else jnp.clip(pos_t, 0, cap - 1)
+        if page_table is not None:
+            k_cache, v_cache = L.paged_kv_update(
+                k_cache, v_cache, k_t[:, None], v_t[:, None], page_table,
+                slot, valid=valid)
+            k_att = L.paged_gather(k_cache, page_table)
+            v_att = L.paged_gather(v_cache, page_table)
+        else:
+            k_cache, v_cache = L.slot_kv_update(
+                k_cache, v_cache, k_t[:, None], v_t[:, None], slot,
+                valid=valid)
+            k_att, v_att = k_cache, v_cache
+        o = L.decode_attention(q_t[:, None], k_att, v_att, pos_t,
+                               window=blk.window, ring=ring)
+        return (k_cache, v_cache), o[:, 0]
+
+    (k_cache, v_cache), outs = jax.lax.scan(
+        tok_step, (cache["k"], cache["v"]),
+        (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+         jnp.arange(c_chunk)))
+    o = outs.swapaxes(0, 1)                                  # (B, C, Hq, hd)
+    out = L.matmul_or_bitmap(o.reshape(b, c_chunk, h * hd), p["wo"],
+                             pk.get("wo"), impl)
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def prefill_hidden(params: Dict, cache: Dict, cfg: ModelConfig,
+                   tokens: jax.Array, pos: jax.Array, lens: jax.Array,
+                   embeds: Optional[jax.Array] = None,
+                   packed: Optional[Dict] = None,
+                   impl: Optional[str] = None,
+                   page_tables: Optional[Dict] = None
+                   ) -> Tuple[jax.Array, Dict]:
+    """One chunked-prefill call: C prompt tokens per slot in one pass.
+
+    tokens: (B, C) (or embeds (B, C, D)); pos: (B,) chunk start
+    positions; lens: (B,) valid tokens per slot (0 = the slot sits this
+    call out; its lane is padding and writes nothing).  Returns (hidden
+    (B, C, D) after the final norm, new cache) — the C KV lines per slot
+    are written into the cache, which is the whole point: after the last
+    chunk the slot joins the decode batch at position ``len(prompt) - 1``
+    with its prompt cache fully resident.
+
+    Projections and MLPs dispatch batched over the chunk (M = C through
+    the packed ``matmul_or_bitmap`` path); MoE FFNs dispatch per token
+    (chunk rows folded into the batch dim) so expert capacity — which
+    scales with sequence length — matches the decode path token for
+    token.  Recurrent mixers (mamba/rwkv) have no chunked path yet; the
+    engine keeps teacher-forcing for those archs with a recorded reason.
+    """
+    x = embed_inputs(params, cfg, tokens, embeds)
+    b, c_chunk, d = x.shape
+
+    def period_fn(x, xs):
+        period_params, period_cache, period_packed = xs
+        new_cache = {}
+        for i, blk in enumerate(cfg.pattern):
+            bp = period_params[f"b{i}"]
+            pc = period_cache[f"b{i}"]
+            pw = (period_packed or {}).get(f"b{i}") or {}
+            nc = {}
+            if blk.mixer == "attn":
+                o, nc = _prefill_attn(bp["attn"], x, pc, cfg, blk, pos,
+                                      lens, packed=pw.get("attn"),
+                                      impl=impl,
+                                      page_table=(page_tables or {}).get(
+                                          f"b{i}"))
+                x = x + o
+            else:
+                raise NotImplementedError(
+                    f"chunked prefill has no {blk.mixer} path; the engine "
+                    f"falls back to teacher-forcing for this arch")
+            if blk.ffn == "mlp":
+                xn = L.norm(x, bp["mlp"].get("norm"), cfg.norm)
+                x = x + L.mlp(bp["mlp"], xn, cfg, packed=pw.get("mlp"),
+                              impl=impl)
+            elif blk.ffn == "moe":
+                xn = L.norm(x, bp["moe"].get("norm"), cfg.norm)
+                # per-token dispatch: capacity = ceil(S·k·cf/E) depends on
+                # the sequence length, so a (B, C) chunk through one MoE
+                # call would drop tokens differently than C decode steps —
+                # folding the chunk into the batch dim keeps the dispatch
+                # (and the tokens) bit-identical to decode
+                mo = L.moe_ffn(bp["moe"], xn.reshape(b * c_chunk, 1, d),
+                               cfg)
+                x = x + mo.reshape(b, c_chunk, d)
+            elif blk.ffn == "rwkv_cm":
+                raise NotImplementedError(
+                    "chunked prefill has no rwkv_cm path; the engine "
+                    "falls back to teacher-forcing for this arch")
+            new_cache[f"b{i}"] = nc
+        return x, new_cache
+
+    x, new_cache = jax.lax.scan(period_fn, x,
+                                (params["blocks"], cache, packed))
+    return L.norm(x, params.get("final_norm"), cfg.norm), new_cache
 
 
 def decode_hidden(params: Dict, cache: Dict, cfg: ModelConfig,

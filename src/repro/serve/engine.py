@@ -15,6 +15,15 @@ system:
   page tables, so reserved cache bytes scale with live tokens instead of
   ``num_slots × max_len`` and out-of-pages admission queues instead of
   crashing;
+* a chunked prefill subsystem (``repro.serve.prefill``): admitted
+  prompts are ingested ``prefill_chunk`` tokens at a time through one
+  batched ``build_prefill_step`` call per engine step — chunks from
+  every mid-prefill request ride one padded ``(B, C)`` call, every
+  projection dispatches at M = C through the packed weight stream, and
+  decode keeps running between calls — instead of teacher-forcing each
+  prompt through the decode step one position per step
+  (``prefill_chunk=0`` keeps that legacy walk as the equivalence
+  oracle);
 * weights pruned once (``global_l1_prune``) and the *whole serve-time
   stack* packed once into the paper's ``BitmapWeight`` format
   (``repro.serve.packed.pack_model``): attention q/k/v/o, MLP
@@ -41,12 +50,13 @@ import numpy as np
 from repro.configs import get_config, get_smoke_config
 from repro.launch import sharding as shd
 from repro.launch.mesh import make_elastic_mesh
-from repro.launch.steps import build_serve_step
+from repro.launch.steps import build_prefill_step, build_serve_step
 from repro.models.config import ModelConfig
 from repro.models.model import init_params, lm_head_weight
 from repro.serve.cache import SlotKVCache
 from repro.serve.packed import PackedModel, choose_block, pack_model
 from repro.serve.paging import PagedKVCache
+from repro.serve.prefill import PrefillPlanner
 from repro.serve.request import Request, RequestRejected, RequestState
 from repro.serve.scheduler import SlotScheduler
 from repro.serve.trace import percentiles
@@ -84,7 +94,8 @@ class ServeEngine:
                  head_sparsity: Optional[float] = None,
                  stream_weights: bool = True, top_k: int = 0,
                  paged: bool = False, page_len: int = 16,
-                 page_pool_tokens: Optional[int] = None):
+                 page_pool_tokens: Optional[int] = None,
+                 prefill_chunk: int = 0):
         """``head_sparsity``: ``global_l1_prune`` deliberately keeps
         (tied) embeddings dense, so the LM head is additionally pruned
         per-tensor to this level before packing — that is what gives the
@@ -113,6 +124,16 @@ class ServeEngine:
         pool (default: worst case, still lazily allocated); when pages
         run out, admission queues until retirements free pages.
         ``paged=False`` (or ``page_len=0``) keeps the contiguous layout.
+
+        ``prefill_chunk``: ingest admitted prompts in batched
+        ``prefill_chunk``-token chunks (one ``build_prefill_step`` call
+        per engine step, chunks from every mid-prefill request batched
+        together) instead of teacher-forcing them through decode steps
+        one position at a time.  0 keeps the legacy teacher-forcing walk
+        — the equivalence oracle: chunked prefill is token-identical to
+        it.  Archs with recurrent mixer state (mamba/rwkv/rwkv_cm) or
+        the frames frontend fall back to teacher-forcing with a recorded
+        reason.
         """
         self.cfg = cfg
         self.num_slots = num_slots
@@ -202,6 +223,39 @@ class ServeEngine:
         step_fn = build_serve_step(cfg, impl=impl, top_k=top_k)
         self._jit_step = jax.jit(step_fn, donate_argnums=(1,))
 
+        # chunked prefill: admitted prompts are ingested prefill_chunk
+        # tokens at a time through one batched prefill call per engine
+        # step; 0 keeps the legacy teacher-forced prompt walk (the
+        # equivalence oracle).  Recurrent mixer state advances one token
+        # per step by construction, and the frames frontend derives its
+        # embeds from the step counter — both keep teacher-forcing with
+        # a recorded reason, like the paging fallbacks above.
+        self.prefill_fallback: Optional[str] = None
+        if prefill_chunk > 0:
+            if cfg.frontend == "frames":
+                self.prefill_fallback = (
+                    f"{cfg.name}: frames frontend derives per-step embeds "
+                    f"from the step counter; nothing to prefill")
+            elif any(b.mixer != "attn" or b.ffn == "rwkv_cm"
+                     for b in cfg.pattern):
+                self.prefill_fallback = (
+                    f"{cfg.name}: recurrent mixer state (mamba/rwkv) has "
+                    f"no chunked prefill path yet; teacher-forcing kept")
+            if self.prefill_fallback:
+                prefill_chunk = 0
+                warnings.warn(f"chunked prefill fell back to "
+                              f"teacher-forcing: {self.prefill_fallback}",
+                              stacklevel=2)
+        self.prefill_chunk = prefill_chunk
+        self.planner: Optional[PrefillPlanner] = (
+            PrefillPlanner(num_slots, prefill_chunk)
+            if prefill_chunk else None)
+        self._jit_prefill = (
+            jax.jit(build_prefill_step(cfg, impl=impl),
+                    donate_argnums=(1,)) if prefill_chunk else None)
+        self._prefill_steps = 0
+        self._decode_steps = 0
+
         self._tok = np.zeros(num_slots, np.int32)
         self._pos = np.zeros(num_slots, np.int32)
         # frames frontend: per-step embeddings come from a jax PRNG key
@@ -245,13 +299,20 @@ class ServeEngine:
         (None: the engine default; 0: no truncation).
 
         Raises ``RequestRejected`` (typed, process keeps serving) when
-        the request can never run: empty prompt, budget beyond
-        ``max_len``, or — under paging — a worst-case page need larger
-        than the whole pool.  A merely *busy* engine never rejects; the
-        request queues until slots (and pages) free up."""
+        the request can never run: empty prompt, a generation budget
+        below one token, budget beyond ``max_len``, or — under paging —
+        a worst-case page need larger than the whole pool.  A merely
+        *busy* engine never rejects; the request queues until slots (and
+        pages) free up."""
         prompt = [int(t) for t in prompt]
         if not prompt:
             raise RequestRejected("empty prompt")
+        if max_new_tokens < 1:
+            # the engine's done-check runs only after appending a token,
+            # so a zero budget would quietly generate one anyway — reject
+            # it typed instead of silently over-delivering
+            raise RequestRejected(
+                f"max_new_tokens must be >= 1, got {max_new_tokens}")
         need = len(prompt) + max_new_tokens - 1
         if need > self.max_len:
             raise RequestRejected(
@@ -297,6 +358,49 @@ class ServeEngine:
                                   embed_rng=ekey, **kw)
         return self._jit_step(self.params, self.kv.cache, tok, pos, **kw)
 
+    def _prefill(self, tokens: np.ndarray, pos: np.ndarray,
+                 lens: np.ndarray):
+        """One jitted chunked-prefill call over the fixed (B, C) batch."""
+        packed = self.packed.blocks if self.packed is not None else None
+        kw = dict(packed=packed)
+        if self.page_len:
+            kw["page_tables"] = self.kv.tables()
+        return self._jit_prefill(self.params, self.kv.cache,
+                                 jnp.asarray(tokens), jnp.asarray(pos),
+                                 jnp.asarray(lens), **kw)
+
+    def _prefill_call(self) -> None:
+        """Run the planner's next batched chunk call and route results.
+
+        Under paging, every participating slot's chunk pages are
+        bulk-mapped in one admission (``ensure_range``) before the call.
+        Slots that finish their last chunk here flip to decode phase at
+        position ``len(prompt) - 1`` — the next decode step consumes the
+        final prompt token and samples the first generated token, just
+        like the teacher-forcing path's last prompt step did.
+        """
+        tokens, pos, lens, finished = self.planner.next_call()
+        if self.page_len:
+            for slot in np.nonzero(lens)[0]:
+                self.kv.ensure_range(int(slot), int(pos[slot]),
+                                     int(pos[slot]) + int(lens[slot]))
+        hidden, cache = self._prefill(tokens, pos, lens)
+        self.kv.cache = cache
+        jax.block_until_ready(hidden)
+        wall = self._wall()
+        for slot in finished:
+            req = self.scheduler.active[slot]
+            self._pos[slot] = len(req.prompt) - 1
+            self._tok[slot] = req.prompt[-1]
+            req.t_prefill_done = wall
+        for slot in np.nonzero(lens)[0]:
+            if int(slot) not in finished:
+                # park the passenger's decode write on the next unwritten
+                # prompt position: the next chunk rewrites that line
+                # before anything reads it
+                self._pos[slot] = self.planner.next_pos(int(slot))
+        self._prefill_steps += 1
+
     def warmup(self) -> None:
         """Compile the decode step + slot reset before the latency clock
         starts — otherwise the first request's percentiles measure XLA
@@ -317,11 +421,26 @@ class ServeEngine:
                                          jnp.asarray(self._pos))
             self.kv.cache = cache
         jax.block_until_ready(nxt)
+        if self.prefill_chunk:
+            # compile the prefill signature too: a throwaway call with
+            # every lane masked (lens = 0) writes nothing — contiguous
+            # lanes drop out of the scatter, paged lanes hit the trash
+            # page — so the cache the first real step sees is untouched.
+            # It runs after the decode warmup, so it consumes (and
+            # yields) the steady-state committed-sharding cache.
+            hidden, cache = self._prefill(
+                np.zeros((self.num_slots, self.prefill_chunk), np.int32),
+                np.zeros(self.num_slots, np.int32),
+                np.zeros(self.num_slots, np.int32))
+            self.kv.cache = cache
+            jax.block_until_ready(hidden)
         self.kv.warmup()
         self._warm = True
 
     def step(self) -> None:
-        """One full-batch decode step: admit, decode, route outputs."""
+        """One engine step: admit, at most one batched prefill call, then
+        the full-batch decode step (skipped only when every active slot
+        is mid-prefill)."""
         self.warmup()
         if self._t0 is None:
             self._t0 = time.perf_counter()
@@ -353,40 +472,65 @@ class ServeEngine:
             req.admit_step = self._steps
             if req.t_due is None:
                 req.t_due = self._wall()
+            req.t_admit = self._wall()
+            if self.planner is not None:
+                self.planner.start(slot, req.prompt)
+            if len(req.prompt) == 1:
+                req.t_prefill_done = req.t_admit   # nothing to prefill
 
-        if self.page_len:
-            # map each active slot's current write page before it decodes
-            for slot in self.scheduler.active:
-                self.kv.ensure(slot, int(self._pos[slot]))
-        nxt, _, cache = self._decode(jnp.asarray(self._tok[:, None]),
-                                     jnp.asarray(self._pos))
-        self.kv.cache = cache
-        nxt_host = np.asarray(nxt)
-        wall = self._wall()
+        # at most one prefill call per engine step: a stream of long
+        # prompts interleaves chunk calls with decode steps instead of
+        # starving the decoding slots
+        prefilled = False
+        if self.planner is not None and self.planner.has_work:
+            self._prefill_call()
+            prefilled = True
 
-        self._active_slot_steps += self.scheduler.num_active
-        for slot, req in list(self.scheduler.active.items()):
-            p = int(self._pos[slot])
-            self._pos[slot] = p + 1
-            if p + 1 < len(req.prompt):
-                # still consuming the prompt: teacher-force the next token
-                self._tok[slot] = req.prompt[p + 1]
-                continue
-            t = int(nxt_host[slot])
-            req.tokens.append(t)
-            if req.t_first is None:
-                req.t_first = wall
-            self._tok[slot] = t
-            if (len(req.tokens) >= req.max_new_tokens
-                    or p + 1 >= self.max_len):
-                req.t_done = wall
-                req.done_step = self._steps
-                self.scheduler.release(slot)
-                if self.page_len:
-                    self.kv.retire(slot)   # pages back to the free list
-                self._pos[slot] = 0
-                self._temp[slot] = 0.0     # freed slots decode greedy
-                self._topk[slot] = 0
+        in_prefill = (self.planner.in_prefill if self.planner is not None
+                      else lambda s: False)
+        decoding = [s for s in self.scheduler.active if not in_prefill(s)]
+        if decoding or not prefilled:
+            if self.page_len:
+                # map each decoding slot's current write page; mid-prefill
+                # passengers stay unmapped and scribble into the trash
+                # page (or an unwritten line their next chunk rewrites)
+                for slot in decoding:
+                    self.kv.ensure(slot, int(self._pos[slot]))
+            nxt, _, cache = self._decode(jnp.asarray(self._tok[:, None]),
+                                         jnp.asarray(self._pos))
+            self.kv.cache = cache
+            nxt_host = np.asarray(nxt)
+            wall = self._wall()
+
+            self._active_slot_steps += len(decoding)
+            for slot, req in list(self.scheduler.active.items()):
+                if in_prefill(slot):
+                    continue
+                p = int(self._pos[slot])
+                self._pos[slot] = p + 1
+                if p + 1 < len(req.prompt):
+                    # still consuming the prompt: teacher-force the next
+                    # token (legacy prompt walk, prefill_chunk == 0)
+                    self._tok[slot] = req.prompt[p + 1]
+                    if p + 1 == len(req.prompt) - 1:
+                        req.t_prefill_done = wall   # prompt cache resident
+                    continue
+                t = int(nxt_host[slot])
+                req.tokens.append(t)
+                if req.t_first is None:
+                    req.t_first = wall
+                self._tok[slot] = t
+                if (len(req.tokens) >= req.max_new_tokens
+                        or p + 1 >= self.max_len):
+                    req.t_done = wall
+                    req.done_step = self._steps
+                    self.scheduler.release(slot)
+                    if self.page_len:
+                        self.kv.retire(slot)   # pages back to the free list
+                    self._pos[slot] = 0
+                    self._temp[slot] = 0.0     # freed slots decode greedy
+                    self._topk[slot] = 0
+            self._decode_steps += 1
         self._steps += 1
 
     def run(self) -> dict:
@@ -435,6 +579,19 @@ class ServeEngine:
                 "dense_bytes_per_step": dense,
                 "reduction": dense / sparse if sparse else 1.0}
 
+    def prefill_report(self) -> dict:
+        """The prefill section: chunk-call accounting + the step split."""
+        rep = {"enabled": self.prefill_chunk > 0,
+               "fallback": self.prefill_fallback,
+               "prefill_steps": self._prefill_steps,
+               "decode_steps": self._decode_steps}
+        if self.planner is not None:
+            rep.update(self.planner.report())
+        else:
+            rep.update({"chunk": 0, "calls": 0, "tokens_prefilled": 0,
+                        "in_flight": 0, "lane_utilization": None})
+        return rep
+
     def report(self) -> dict:
         done = [r for r in self.requests if r.state == RequestState.DONE]
         dt = self._wall() if self._t0 is not None else 0.0
@@ -443,6 +600,19 @@ class ServeEngine:
                            if r.latency_s is not None])
         ftl = percentiles([r.first_token_s for r in done
                            if r.first_token_s is not None])
+        # TTFT decomposition: queueing (no slot), prompt ingestion
+        # (chunked prefill calls or the legacy teacher-forced walk), and
+        # the first real decode step — first_token_s is their sum, no
+        # longer conflating prompt-walk time with queueing
+        ttft = {
+            "queue_s": percentiles([r.queue_s for r in done
+                                    if r.queue_s is not None]),
+            "prefill_s": percentiles([r.prefill_s for r in done
+                                      if r.prefill_s is not None]),
+            "first_decode_s": percentiles(
+                [r.first_decode_s for r in done
+                 if r.first_decode_s is not None]),
+        }
         occ = (self._active_slot_steps / (self._steps * self.num_slots)
                if self._steps else 0.0)
         if self.page_len:
@@ -463,6 +633,8 @@ class ServeEngine:
             "tok_per_s": gen / dt if dt > 0 else float("nan"),
             "latency_s": lat,
             "first_token_s": ftl,
+            "ttft": ttft,
+            "prefill": self.prefill_report(),
             "slot_occupancy": occ,
             "weight_sparsity": self.weight_sparsity,
             "head_compression": self.head_compression,

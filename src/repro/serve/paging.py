@@ -187,6 +187,19 @@ class PagedKVCache:
         self.resets += 1
         self.ensure(slot, 0)
 
+    def _map_page(self, bname: str, pool: PagePool, slot: int,
+                  pi: int) -> None:
+        """Map one logical page-table entry, allocating off the free list
+        (no-op when already mapped)."""
+        if pool.table[slot, pi] == 0:
+            assert pool.free, (
+                f"{bname}: free list empty with {pool.committed} committed "
+                f"of {pool.pool_pages} — commitment invariant broken")
+            pool.table[slot, pi] = pool.free.pop()
+            pool.in_use += 1
+            pool.peak = max(pool.peak, pool.in_use)
+            self._dev_tables = None
+
     def ensure(self, slot: int, pos: int) -> None:
         """Map the page holding ``pos``'s write slot, allocating lazily.
 
@@ -198,15 +211,31 @@ class PagedKVCache:
             cap, ring = paged_addressing(pool.page_slots, self.page_len,
                                          pool.window)
             wslot = pos % cap if ring else min(max(pos, 0), cap - 1)
-            pi = wslot // self.page_len
-            if pool.table[slot, pi] == 0:
-                assert pool.free, (
-                    f"{b}: free list empty with {pool.committed} committed "
-                    f"of {pool.pool_pages} — commitment invariant broken")
-                pool.table[slot, pi] = pool.free.pop()
-                pool.in_use += 1
-                pool.peak = max(pool.peak, pool.in_use)
-                self._dev_tables = None
+            self._map_page(b, pool, slot, wslot // self.page_len)
+
+    def ensure_range(self, slot: int, start: int, end: int) -> None:
+        """Bulk-map every page a chunk touching positions
+        ``start .. end-1`` will write — chunked prefill's one-admission
+        analogue of per-step ``ensure``: all of the chunk's pages are
+        mapped before the prefill call, so the device-side scatter never
+        meets an unmapped live position.
+
+        Same addressing as ``ensure``; ring pools that wrap within the
+        range simply map their whole table (a ring never needs more than
+        ``page_slots`` pages).
+        """
+        if end <= start:
+            return
+        for b, pool in self.pools.items():
+            cap, ring = paged_addressing(pool.page_slots, self.page_len,
+                                         pool.window)
+            if ring and end - start >= cap:
+                pis = range(pool.page_slots)
+            else:
+                pis = {(p % cap if ring else min(max(p, 0), cap - 1))
+                       // self.page_len for p in range(start, end)}
+            for pi in sorted(pis):
+                self._map_page(b, pool, slot, pi)
 
     def retire(self, slot: int) -> None:
         """Return the slot's pages to the free list and uncommit."""

@@ -1,0 +1,137 @@
+"""Chunked batched prefill planner for the serving engine.
+
+Until now the engine admitted every request by teacher-forcing its
+prompt through the B=1-token decode step, one position per engine step:
+a 100-token prompt cost 100 full-batch decode steps of latency before
+the first generated token, and every one of those steps streamed the
+whole compressed weight stack to advance a single position per slot.
+Prefill is exactly where the bitmap weight stream amortizes — EIE and
+CoDR both make the case that compressed-weight reuse pays off when many
+activations share one fetched weight tile, and decode (M=1) is the
+worst case while prefill (M=chunk) is the best.
+
+The planner turns waiting prompts into fixed-shape prefill calls:
+
+* each admitted request's prompt positions ``0 .. len(prompt)-2`` are
+  split into fixed ``chunk``-token pieces (the last prompt token is
+  *not* prefilled — it feeds the first real decode step, which samples
+  the first generated token exactly like the teacher-forcing path did);
+* every engine step, chunks from **all** slots currently mid-prefill are
+  batched into one padded ``(num_slots, chunk)`` call — one jit
+  signature regardless of how many requests are prefilling, with
+  padding lanes masked by a per-slot length vector;
+* the engine budgets **at most one prefill call per engine step**, so a
+  stream of long prompts cannot starve the decode slots: prefill and
+  decode interleave step for step, decode keeps running at full batch
+  width, and prefilling slots ride the decode batch as masked
+  passengers until their cache is resident.
+
+The planner is pure host-side bookkeeping — the device work is
+``models.model.prefill_hidden`` via ``launch.steps.build_prefill_step``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class PrefillJob:
+    """One slot's remaining prompt ingestion."""
+
+    prompt: List[int]
+    next: int            # next prompt position to prefill
+    end: int             # stop (exclusive): len(prompt) - 1
+
+
+class PrefillPlanner:
+    """Splits admitted prompts into chunks and batches them into calls.
+
+    ``start(slot, prompt)`` registers a slot whose prompt needs
+    prefilling (returns False for single-token prompts, which go
+    straight to decode); ``next_call()`` assembles one padded
+    ``(num_slots, chunk)`` batch covering every registered slot's next
+    chunk and advances the plan.  The engine calls ``next_call`` at most
+    once per step while ``has_work``.
+    """
+
+    def __init__(self, num_slots: int, chunk: int):
+        assert chunk > 0
+        self.num_slots = num_slots
+        self.chunk = chunk
+        self._jobs: Dict[int, PrefillJob] = {}
+        self.calls = 0
+        self.tokens_prefilled = 0
+
+    # ------------------------------------------------------------ plan ----
+
+    def start(self, slot: int, prompt: Sequence[int]) -> bool:
+        """Register a freshly admitted slot; False = nothing to prefill
+        (the prompt is a single token — decode consumes it directly)."""
+        assert slot not in self._jobs, f"slot {slot} already prefilling"
+        end = len(prompt) - 1
+        if end <= 0:
+            return False
+        self._jobs[slot] = PrefillJob(list(prompt), 0, end)
+        return True
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self._jobs)
+
+    def in_prefill(self, slot: int) -> bool:
+        return slot in self._jobs
+
+    def next_pos(self, slot: int) -> int:
+        """The slot's next unwritten prompt position — the engine parks
+        the slot's decode-passenger write there (the next chunk rewrites
+        it, so the junk line is never read)."""
+        return self._jobs[slot].next
+
+    # ------------------------------------------------------------ call ----
+
+    def next_call(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                 List[int]]:
+        """Assemble one batched prefill call and advance the plan.
+
+        Returns ``(tokens (num_slots, chunk) int32, pos (num_slots,)
+        int32, lens (num_slots,) int32, finished slots)`` — every
+        registered slot contributes its next ``<= chunk`` prompt tokens;
+        rows with ``lens == 0`` are padding lanes the device masks off.
+        Slots whose last chunk this is are returned in ``finished`` and
+        leave the plan (the engine flips them to decode phase).
+        """
+        assert self._jobs, "next_call with no prefill work"
+        tokens = np.zeros((self.num_slots, self.chunk), np.int32)
+        pos = np.zeros(self.num_slots, np.int32)
+        lens = np.zeros(self.num_slots, np.int32)
+        finished: List[int] = []
+        for slot in sorted(self._jobs):
+            job = self._jobs[slot]
+            n = min(self.chunk, job.end - job.next)
+            tokens[slot, :n] = job.prompt[job.next:job.next + n]
+            pos[slot] = job.next
+            lens[slot] = n
+            job.next += n
+            if job.next >= job.end:
+                finished.append(slot)
+        for slot in finished:
+            del self._jobs[slot]
+        self.calls += 1
+        self.tokens_prefilled += int(lens.sum())
+        return tokens, pos, lens, finished
+
+    # --------------------------------------------------------- reports ----
+
+    def report(self) -> Dict:
+        lanes = self.calls * self.num_slots * self.chunk
+        return {
+            "chunk": self.chunk,
+            "calls": self.calls,
+            "tokens_prefilled": self.tokens_prefilled,
+            "in_flight": len(self._jobs),
+            "lane_utilization": (self.tokens_prefilled / lanes
+                                 if lanes else None),
+        }

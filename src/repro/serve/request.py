@@ -49,6 +49,10 @@ class Request:
     admit_step: Optional[int] = None
     done_step: Optional[int] = None
     t_due: Optional[float] = None   # wall time the arrival offset was reached
+    t_admit: Optional[float] = None  # wall time a slot was granted
+    t_prefill_done: Optional[float] = None  # wall time the prompt cache was
+    #                                 resident (last prefill chunk, or the
+    #                                 last teacher-forced prompt step)
     t_first: Optional[float] = None  # wall time of the first generated token
     t_done: Optional[float] = None   # wall time generation finished
 
@@ -61,6 +65,31 @@ class Request:
 
     @property
     def first_token_s(self) -> Optional[float]:
+        """Total TTFT (arrival -> first generated token) — the sum of the
+        queue / prefill / first-decode components below."""
         if self.t_due is None or self.t_first is None:
             return None
         return self.t_first - self.t_due
+
+    @property
+    def queue_s(self) -> Optional[float]:
+        """Arrival -> slot granted: pure queueing, no compute."""
+        if self.t_due is None or self.t_admit is None:
+            return None
+        return self.t_admit - self.t_due
+
+    @property
+    def prefill_s(self) -> Optional[float]:
+        """Slot granted -> prompt cache resident (chunked prefill calls,
+        or the one-token-per-step teacher-forced walk in legacy mode)."""
+        if self.t_admit is None or self.t_prefill_done is None:
+            return None
+        return self.t_prefill_done - self.t_admit
+
+    @property
+    def first_decode_s(self) -> Optional[float]:
+        """Prompt resident -> first generated token (the first real
+        decode step, including any wait for its turn in the batch)."""
+        if self.t_prefill_done is None or self.t_first is None:
+            return None
+        return self.t_first - self.t_prefill_done

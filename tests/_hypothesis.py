@@ -10,7 +10,8 @@ property-test modules use:
   with draws from a per-test seeded ``numpy`` RNG (seed = CRC32 of the
   test's qualified name, so example sequences are stable across runs
   and machines);
-* ``strategies.integers / floats / booleans / lists / sampled_from``.
+* ``strategies.integers / floats / booleans / lists / tuples /
+  sampled_from``.
 
 Unlike real hypothesis there is no shrinking and no adaptive search —
 failures report the drawn example verbatim.  The point is that the
@@ -70,6 +71,11 @@ def lists(elements: _Strategy, min_size: int = 0,
         n = int(rng.integers(min_size, max_size, endpoint=True))
         return [elements.example(rng) for _ in range(n)]
     return _Strategy(draw, f"lists({elements!r}, {min_size}, {max_size})")
+
+
+def tuples(*elements: _Strategy) -> _Strategy:
+    return _Strategy(lambda rng: tuple(e.example(rng) for e in elements),
+                     f"tuples({', '.join(repr(e) for e in elements)})")
 
 
 def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,
@@ -133,6 +139,7 @@ class _StrategiesModule:
     floats = staticmethod(floats)
     booleans = staticmethod(booleans)
     lists = staticmethod(lists)
+    tuples = staticmethod(tuples)
     sampled_from = staticmethod(sampled_from)
 
 
