@@ -1,25 +1,32 @@
 """Whole-stack bitmap weight streaming at serve time: the proof sweep.
 
-Drives the continuous-batching engine over a (sparsity × slots) grid,
-once with the whole decode stack packed (``pack_model`` + bitmap LM
-head) and once with dense dispatch, on the same seeded Poisson trace —
-so each cell reports:
+Drives the continuous-batching engine over a (arch × sparsity × slots)
+grid, once with the whole decode stack packed (``pack_model`` + bitmap
+LM head) and once with dense dispatch, on the same seeded Poisson trace
+— so each cell reports:
 
 * measured tok/s, packed vs dense (packing is lossless, so the tokens
   are identical and any delta is pure dispatch overhead);
 * the engine's modeled per-step weight-HBM bytes across the stack
   (sparse vs dense) and the resulting reduction — the serve-time
-  analogue of the paper's 86 % SRAM-access cut;
+  analogue of the paper's 86 % SRAM-access cut.  MoE rows count expert
+  stacks once per *activated* expert per step (min(E, slots × top_k) —
+  the accounting rule in DESIGN_PACKED.md), and since PR 5 the MoE
+  expert stacks and SSM mixer projections themselves stream compressed,
+  so the granite-moe / jamba rows measure the full-stack cut;
 * how many tensors packed vs fell back to dense (with reasons in the
   engine report).
 
-``--out BENCH_serve.json`` records the sweep for the perf trajectory
-(scripts/ci.sh runs a smoke cell every CI pass).
+``--archs`` sweeps several architectures in one run (CI covers an
+attn/MLP arch, an MoE arch and the jamba hybrid); ``--out
+BENCH_serve.json`` merges ``rows`` + per-arch ``headlines`` into the
+bench file, preserving the other tools' sections.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 
 from repro.configs import get_config, get_smoke_config
 from repro.serve import ServeEngine, poisson_trace
@@ -102,6 +109,7 @@ def sweep(arch: str = "olmo-1b", smoke: bool = True,
         "tok_per_s_ratio_at_75": (min(r["tok_per_s_ratio"] for r in target)
                                   if target else None),
         "tok_per_s_ratio_worst": min(r["tok_per_s_ratio"] for r in rows),
+        "fallback_tensors": rows[-1]["fallback_tensors"],
     }
     if verbose and target:
         print(f"  headline: >= {headline['hbm_reduction_at_75']:.2f}x "
@@ -113,7 +121,8 @@ def sweep(arch: str = "olmo-1b", smoke: bool = True,
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--archs", "--arch", nargs="+", default=["olmo-1b"],
+                    help="architectures to sweep (one set of rows each)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--sparsities", type=float, nargs="+",
                     default=[0.0, 0.5, 0.75])
@@ -124,17 +133,29 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--out", default=None,
-                    help="write the sweep as JSON (e.g. BENCH_serve.json)")
+                    help="merge rows + per-arch headlines into this JSON "
+                         "file (e.g. BENCH_serve.json)")
     args = ap.parse_args()
-    result = sweep(args.arch, smoke=args.smoke,
-                   sparsities=tuple(args.sparsities),
-                   slots_list=tuple(args.slots), requests=args.requests,
-                   rate=args.rate, max_len=args.max_len, seed=args.seed,
-                   repeats=args.repeats)
+    rows, headlines = [], {}
+    for arch in args.archs:
+        result = sweep(arch, smoke=args.smoke,
+                       sparsities=tuple(args.sparsities),
+                       slots_list=tuple(args.slots), requests=args.requests,
+                       rate=args.rate, max_len=args.max_len, seed=args.seed,
+                       repeats=args.repeats)
+        rows.extend(result["rows"])
+        headlines[arch] = result["headline"]
     if args.out:
+        data = {}
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                data = json.load(f)
+        data.pop("headline", None)      # superseded by per-arch headlines
+        data["rows"] = rows
+        data["headlines"] = headlines
         with open(args.out, "w") as f:
-            json.dump(result, f, indent=2)
-        print(f"wrote {args.out}")
+            json.dump(data, f, indent=2)
+        print(f"merged {len(rows)} rows + headlines into {args.out}")
 
 
 if __name__ == "__main__":

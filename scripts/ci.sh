@@ -12,10 +12,15 @@ echo "== serving smoke: continuous batching + bitmap-compressed head =="
 PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --smoke \
     --sparsity 0.5 --slots 2 --requests 6 --max-len 64
 
-echo "== bench smoke: whole-stack bitmap streaming -> BENCH_serve.json =="
+echo "== bench smoke: whole-stack bitmap streaming (attn/MLP + MoE + jamba hybrid) -> BENCH_serve.json =="
 PYTHONPATH=src python benchmarks/bitmap_streaming.py --smoke \
-    --sparsities 0.0 0.75 --slots 2 --requests 8 --max-len 32 \
+    --archs olmo-1b granite-moe-3b-a800m jamba-v0.1-52b \
+    --sparsities 0.0 0.75 --slots 2 --requests 8 --max-len 32 --repeats 2 \
     --out BENCH_serve.json
+
+echo "== manifest coverage report (MoE expert stacks + SSM mixers packed) =="
+PYTHONPATH=src python scripts/manifest_report.py \
+    --archs granite-moe-3b-a800m jamba-v0.1-52b
 
 echo "== bench smoke: paged KV cache -> BENCH_serve.json (paging) =="
 PYTHONPATH=src python benchmarks/paged_serving.py --smoke \

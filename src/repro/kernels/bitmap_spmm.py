@@ -120,6 +120,43 @@ def bitmap_spmm(x: jax.Array, w: BitmapWeight, *, bm: int = 128,
     )(x, w.packed_bits, w.values, w.row_start)
 
 
+def group_slice(w: BitmapWeight, g: int) -> BitmapWeight:
+    """The g-th (K, N) member of a group-stacked ``BitmapWeight``.
+
+    Group-stacked weights (MoE expert stacks, RWKV lerp stacks — see
+    ``sparse.format.pack_bitmap_experts``) carry one leading G axis per
+    array leaf at dispatch time (the period axis has already been
+    scanned off); ``shape``/``block``/``budget`` are shared, so a slice
+    is a plain per-matrix ``BitmapWeight`` the kernel accepts as-is.
+    The ``dense_cache`` is deliberately not sliced through: the Pallas
+    path never reads it (it exists only for the xla oracle dispatch,
+    which consumes the stacked cache whole).
+    """
+    return BitmapWeight(packed_bits=w.packed_bits[g], values=w.values[g],
+                        row_start=w.row_start[g], shape=w.shape,
+                        block=w.block)
+
+
+def bitmap_spmm_grouped(x: jax.Array, w: BitmapWeight, *, bm: int = 128,
+                        interpret: bool = True, out_dtype=None) -> jax.Array:
+    """Per-group ``x[g] @ W_g`` over a group-stacked ``BitmapWeight``.
+
+    x: (G, M, K); W logical shape (K, N) per group, array leaves leading
+    with G.  Returns (G, M, N).  The group count is static (it is a
+    weight-layout property), so the dispatch is an unrolled loop of G
+    small-M ``bitmap_spmm`` calls, each streaming only its own group's
+    compressed tiles.  Note the capacity-dispatch MoE caller runs this
+    over *all* stored experts; the manifest's per-activated-expert HBM
+    accounting models a gather dispatch that skips unselected groups
+    (DESIGN_PACKED.md §6, modeled vs executed).
+    """
+    g = x.shape[0]
+    assert g == w.values.shape[0], (x.shape, w.values.shape)
+    return jnp.stack([
+        bitmap_spmm(x[i], group_slice(w, i), bm=bm, interpret=interpret,
+                    out_dtype=out_dtype) for i in range(g)])
+
+
 def hbm_traffic_model(x_shape: Tuple[int, int], w: BitmapWeight,
                       bm: int = 128, itemsize: int = 2) -> dict:
     """Analytic HBM bytes of one bitmap_spmm call vs its dense equivalent.

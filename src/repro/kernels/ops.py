@@ -13,6 +13,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels.bitmap_spmm import bitmap_spmm as _bitmap_spmm_pallas
+from repro.kernels.bitmap_spmm import (
+    bitmap_spmm_grouped as _bitmap_spmm_grouped_pallas)
 from repro.kernels.block_sparse import (
     block_sparse_matmul as _block_sparse_pallas)
 from repro.kernels.flash_attention import (
@@ -40,6 +42,20 @@ def bitmap_spmm(x: jax.Array, w: BitmapWeight, impl: str | None = None,
                                   interpret=(impl == "pallas_interpret"),
                                   **kw)
     return out.reshape(lead + (w.shape[1],)) if len(lead) != 1 else out
+
+
+def bitmap_spmm_grouped(x: jax.Array, w: BitmapWeight,
+                        impl: str | None = None, **kw) -> jax.Array:
+    """Per-group ``x[g] @ W_g`` over a group-stacked ``BitmapWeight``
+    (MoE expert stacks, RWKV lerp stacks — layout in
+    ``sparse.format.pack_bitmap_experts``).  x: (G, M, K) -> (G, M, N);
+    the Pallas path unrolls G small-M kernel calls so each group streams
+    only its own compressed tiles."""
+    impl = impl or default_impl()
+    if impl == "xla":
+        return _ref.bitmap_spmm_grouped_ref(x, w)
+    return _bitmap_spmm_grouped_pallas(
+        x, w, interpret=(impl == "pallas_interpret"), **kw)
 
 
 def block_sparse_matmul(x: jax.Array, w: BlockSparseWeight,

@@ -5,7 +5,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.sparse.format import (BitmapWeight, BlockSparseWeight,
-                                 unpack_bitmap, unpack_block_sparse)
+                                 unpack_bitmap, unpack_bitmap_stacked,
+                                 unpack_block_sparse)
 
 
 def bitmap_spmm_ref(x: jax.Array, w: BitmapWeight) -> jax.Array:
@@ -21,6 +22,18 @@ def bitmap_spmm_ref(x: jax.Array, w: BitmapWeight) -> jax.Array:
              else unpack_bitmap(w)).astype(x.dtype)
     return jnp.dot(x, dense, preferred_element_type=jnp.float32).astype(
         x.dtype)
+
+
+def bitmap_spmm_grouped_ref(x: jax.Array, w: BitmapWeight) -> jax.Array:
+    """Oracle for ``bitmap_spmm_grouped``; also the serve-time xla
+    dispatch for group-stacked weights (MoE expert stacks, RWKV lerp
+    stacks).  x: (G, M, K); W leaves lead with G.  Returns (G, M, N).
+    Like ``bitmap_spmm_ref``, a pack-time ``dense_cache`` short-circuits
+    the software EIM re-sort."""
+    dense = (w.dense_cache if w.dense_cache is not None
+             else unpack_bitmap_stacked(w)).astype(x.dtype)
+    return jnp.einsum("gmk,gkn->gmn", x, dense,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
 
 
 def block_sparse_matmul_ref(x: jax.Array, w: BlockSparseWeight) -> jax.Array:

@@ -290,16 +290,39 @@ def paged_gather(pool: jax.Array, page_table: jax.Array) -> jax.Array:
 # ----------------------------------------------------------------- MoE -----
 
 
-def _moe_ffn_global(params: dict, x: jax.Array, cfg: ModelConfig
-                    ) -> jax.Array:
+def expert_matmul_or_bitmap(h: jax.Array, w: jax.Array, bw, impl
+                            ) -> jax.Array:
+    """Per-expert GEMM ``h[..., e, :, :] @ w[e]`` for expert stacks.
+
+    h: (..., E, C, K); w: (E, K, N).  A group-stacked ``BitmapWeight``
+    (``bw`` — see ``sparse.format.pack_bitmap_experts``) streams each
+    expert's compressed tiles through ``kernels/ops.bitmap_spmm_grouped``
+    instead; ``bw is None`` keeps the dense einsum both MoE dispatch
+    variants always ran."""
+    if bw is None:
+        return jnp.einsum("...eck,ekn->...ecn", h, w.astype(h.dtype))
+    from repro.kernels import ops  # lazy: layers must not import kernels
+    lead = h.shape[:-3]
+    e, c, k = h.shape[-3:]
+    hx = jnp.moveaxis(h.reshape((-1, e, c, k)), 1, 0).reshape(e, -1, k)
+    out = ops.bitmap_spmm_grouped(hx, bw, impl=impl)
+    n = out.shape[-1]
+    return jnp.moveaxis(out.reshape(e, -1, c, n), 0, 1).reshape(
+        lead + (e, c, n))
+
+
+def _moe_ffn_global(params: dict, x: jax.Array, cfg: ModelConfig,
+                    packed: Optional[dict] = None,
+                    impl: Optional[str] = None) -> jax.Array:
     """§Perf H3 "before": global flat-token dispatch (argsort across the
     whole batch) — forces GSPMD to all-gather the token buffer."""
+    pk = packed or {}
     b, s, d = x.shape
     e, k = cfg.num_experts, cfg.top_k
     t = b * s
     cap = int(t * k * cfg.capacity_factor / e) + 1
     xt = x.reshape(t, d)
-    logits = jnp.einsum("td,de->te", xt, params["router"].astype(x.dtype))
+    logits = matmul_or_bitmap(xt, params["router"], pk.get("router"), impl)
     probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
     gate, expert_idx = jax.lax.top_k(probs, k)
     gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
@@ -314,12 +337,12 @@ def _moe_ffn_global(params: dict, x: jax.Array, cfg: ModelConfig
     buf = jnp.zeros((e * cap, d), x.dtype)
     buf = buf.at[slot].add(jnp.where(keep[:, None], xt[src_token], 0))
     buf = buf.reshape(e, cap, d)
-    wg = params["w_gate"].astype(x.dtype)
-    wu = params["w_up"].astype(x.dtype)
-    wd = params["w_down"].astype(x.dtype)
-    h = activation(jnp.einsum("ecd,edf->ecf", buf, wg), cfg.act)
-    h = h * jnp.einsum("ecd,edf->ecf", buf, wu)
-    y = jnp.einsum("ecf,efd->ecd", h, wd).reshape(e * cap, d)
+    h = activation(expert_matmul_or_bitmap(buf, params["w_gate"],
+                                           pk.get("w_gate"), impl), cfg.act)
+    h = h * expert_matmul_or_bitmap(buf, params["w_up"], pk.get("w_up"),
+                                    impl)
+    y = expert_matmul_or_bitmap(h, params["w_down"], pk.get("w_down"),
+                                impl).reshape(e * cap, d)
     gath = jnp.where(keep[:, None], y[slot], 0)
     gval = gate.reshape(-1)[order]
     out = jnp.zeros((t, d), jnp.float32)
@@ -327,7 +350,9 @@ def _moe_ffn_global(params: dict, x: jax.Array, cfg: ModelConfig
     return out.reshape(b, s, d).astype(x.dtype)
 
 
-def moe_ffn(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+def moe_ffn(params: dict, x: jax.Array, cfg: ModelConfig,
+            packed: Optional[dict] = None,
+            impl: Optional[str] = None) -> jax.Array:
     """Sort-based top-k MoE with static capacity. x: (B, S, D) -> (B, S, D).
 
     Dispatch is *per batch row* (§Perf H3): the sort, ranking and bucket
@@ -337,16 +362,22 @@ def moe_ffn(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
     Capacity is per-row: C = ceil(S·k·cf / E); overflow tokens are dropped
     (standard capacity dispatch).  Expert weights shard on the FFN dim
     ("model"), so the expert einsums are local too.
+
+    ``packed`` maps ``router`` to a period-stacked ``BitmapWeight`` and
+    ``w_gate``/``w_up``/``w_down`` to expert-stacked ones (serve-time
+    compressed streaming — see repro.serve.packed / DESIGN_PACKED.md);
+    present entries dispatch per-expert bitmap SpMM through kernels/ops.
     """
     from repro.models import shard_utils
     from repro.models.perf_flags import baseline_mode
     if baseline_mode():
-        return _moe_ffn_global(params, x, cfg)
+        return _moe_ffn_global(params, x, cfg, packed=packed, impl=impl)
+    pk = packed or {}
     b, s, d = x.shape
     e, k = cfg.num_experts, cfg.top_k
     cap = int(s * k * cfg.capacity_factor / e) + 1
 
-    logits = jnp.einsum("bsd,de->bse", x, params["router"].astype(x.dtype))
+    logits = matmul_or_bitmap(x, params["router"], pk.get("router"), impl)
     probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
     gate, expert_idx = jax.lax.top_k(probs, k)           # (B, S, k)
     gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
@@ -371,15 +402,15 @@ def moe_ffn(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
         jnp.where(keep[..., None], gathered, 0))
     buf = shard_utils.hint(buf.reshape(b, e, cap, d), "batch")
 
-    wg = params["w_gate"].astype(x.dtype)
-    wu = params["w_up"].astype(x.dtype)
-    wd = params["w_down"].astype(x.dtype)
-    h = activation(jnp.einsum("becd,edf->becf", buf, wg), cfg.act)
-    h = h * jnp.einsum("becd,edf->becf", buf, wu)
+    h = activation(expert_matmul_or_bitmap(buf, params["w_gate"],
+                                           pk.get("w_gate"), impl), cfg.act)
+    h = h * expert_matmul_or_bitmap(buf, params["w_up"], pk.get("w_up"),
+                                    impl)
     # §Perf iter 4: gather h across the F shards so the w_down contraction
     # and the whole combine run locally on D shards (no capacity-buffer AR)
     h = shard_utils.hint(h, "batch", None, None, None)
-    y = jnp.einsum("becf,efd->becd", h, wd).reshape(b, e * cap, d)
+    y = expert_matmul_or_bitmap(h, params["w_down"], pk.get("w_down"),
+                                impl).reshape(b, e * cap, d)
     y = shard_utils.hint(y, "batch", None, "model")
 
     out_tok = jnp.take_along_axis(y, slot[..., None], axis=1)  # (B,S*k,D)

@@ -608,7 +608,7 @@ def prefill_hidden(params: Dict, cache: Dict, cfg: ModelConfig,
                 # folding the chunk into the batch dim keeps the dispatch
                 # (and the tokens) bit-identical to decode
                 mo = L.moe_ffn(bp["moe"], xn.reshape(b * c_chunk, 1, d),
-                               cfg)
+                               cfg, packed=pw.get("moe"), impl=impl)
                 x = x + mo.reshape(b, c_chunk, d)
             elif blk.ffn == "rwkv_cm":
                 raise NotImplementedError(
@@ -638,9 +638,12 @@ def decode_hidden(params: Dict, cache: Dict, cfg: ModelConfig,
     scan xs/ys.
 
     ``packed`` mirrors ``params["blocks"]`` with period-stacked
-    ``BitmapWeight`` leaves (or None where a tensor fell back to dense —
-    see repro.serve.packed); the scan slices off the period axis so each
-    iteration's projections stream bitmap-compressed through kernels/ops.
+    ``BitmapWeight`` leaves — 2-D projections (attention, MLP, MoE
+    router, mamba/rwkv mixer and channel-mix GEMMs) plus group-stacked
+    MoE expert tensors and rwkv's mix_B (or None where a tensor fell
+    back to dense — see repro.serve.packed); the scan slices off the
+    period axis so each iteration's projections stream bitmap-compressed
+    through kernels/ops.
 
     ``page_tables`` (``{bname: (B, page_slots) int32}``) switches attention
     blocks onto the paged-cache layout.  Tables are shared by all periods
@@ -668,14 +671,16 @@ def decode_hidden(params: Dict, cache: Dict, cfg: ModelConfig,
                 xn = L.norm(x, bp["mamba"].get("norm"), cfg.norm)
                 o, st = ssm.mamba_decode(bp["mamba"], xn,
                                          {"h": pc["h"], "conv": pc["conv"]},
-                                         cfg)
+                                         cfg, packed=pw.get("mamba"),
+                                         impl=impl)
                 x = x + o
                 nc = st
             elif blk.mixer == "rwkv":
                 xn = L.norm(x, bp["rwkv"].get("norm"), cfg.norm)
                 o, st = ssm.rwkv_decode(bp["rwkv"], xn,
                                         {"s": pc["s"],
-                                         "x_prev": pc["x_prev"]}, cfg)
+                                         "x_prev": pc["x_prev"]}, cfg,
+                                        packed=pw.get("rwkv"), impl=impl)
                 x = x + o
                 nc = st
             if blk.ffn == "mlp":
@@ -684,11 +689,14 @@ def decode_hidden(params: Dict, cache: Dict, cfg: ModelConfig,
                               impl=impl)
             elif blk.ffn == "moe":
                 xn = L.norm(x, bp["moe"].get("norm"), cfg.norm)
-                x = x + L.moe_ffn(bp["moe"], xn, cfg)
+                x = x + L.moe_ffn(bp["moe"], xn, cfg, packed=pw.get("moe"),
+                                  impl=impl)
             elif blk.ffn == "rwkv_cm":
                 xn = L.norm(x, bp["rwkv_cm"].get("norm"), cfg.norm)
                 x = x + ssm.rwkv_channel_mix(bp["rwkv_cm"], xn, cfg,
-                                             x_prev=pc["cm_x_prev"][:, None])
+                                             x_prev=pc["cm_x_prev"][:, None],
+                                             packed=pw.get("rwkv_cm"),
+                                             impl=impl)
                 nc["cm_x_prev"] = xn[:, 0]
             new_cache[f"b{i}"] = nc
         return x, new_cache

@@ -9,17 +9,24 @@ archs are why the 500k-context cells are runnable at all (O(1) state vs a
 KV cache).
 
 The paper's EIM/SIDR applies to the projection GEMMs of both mixers; the
-recurrences themselves are not GEMMs (DESIGN.md §4).
+recurrences themselves are not GEMMs (DESIGN.md §4).  At serve time the
+``*_decode`` cells (and the RWKV channel-mix) take a ``packed`` dict
+mapping projection names to ``BitmapWeight``s so those GEMMs stream
+bitmap-compressed through ``layers.matmul_or_bitmap`` — the 2-D mixer
+projections ride the same period-stacked layout as attention/MLP, and
+RWKV6's 5-way lerp stack ``mix_B`` rides the group-stacked expert
+layout (see repro.serve.packed / DESIGN_PACKED.md).  The full-sequence
+``*_mix`` forwards (training path) stay dense.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.config import ModelConfig
-from repro.models.layers import group_norm_heads
+from repro.models.layers import group_norm_heads, matmul_or_bitmap
 
 # ---------------------------------------------------------------- Mamba ----
 
@@ -95,16 +102,20 @@ def mamba_mix(params: dict, x: jax.Array, cfg: ModelConfig,
     return y @ params["out_proj"].astype(dt_)
 
 
-def mamba_decode(params: dict, x: jax.Array, state: dict, cfg: ModelConfig
+def mamba_decode(params: dict, x: jax.Array, state: dict, cfg: ModelConfig,
+                 packed: Optional[dict] = None, impl: Optional[str] = None
                  ) -> Tuple[jax.Array, dict]:
     """One-token Mamba step. x: (B, 1, D); state: {"h": (B,dI,N),
-    "conv": (B, K-1, dI)}."""
+    "conv": (B, K-1, dI)}.  ``packed`` maps in/x/dt/out projection names
+    to ``BitmapWeight``s (serve-time compressed streaming)."""
+    pk = packed or {}
     b, _, d = x.shape
     n = cfg.mamba_d_state
     dtr = cfg.mamba_dt_rank
     dt_ = x.dtype
 
-    xz = x[:, 0] @ params["in_proj"].astype(dt_)
+    xz = matmul_or_bitmap(x[:, 0], params["in_proj"], pk.get("in_proj"),
+                          impl)
     xs, z = jnp.split(xz, 2, axis=-1)                    # (B, dI)
 
     conv_w = params["conv_w"].astype(dt_)                # (dI, K)
@@ -113,9 +124,10 @@ def mamba_decode(params: dict, x: jax.Array, state: dict, cfg: ModelConfig
     xs_c = jax.nn.silu(xs_c + params["conv_b"].astype(dt_))
     new_conv = hist[:, 1:]
 
-    dbc = xs_c @ params["x_proj"].astype(dt_)
+    dbc = matmul_or_bitmap(xs_c, params["x_proj"], pk.get("x_proj"), impl)
     dt, bmat, cmat = jnp.split(dbc, [dtr, dtr + n], axis=-1)
-    dt = jax.nn.softplus(dt @ params["dt_proj"].astype(dt_)
+    dt = jax.nn.softplus(matmul_or_bitmap(dt, params["dt_proj"],
+                                          pk.get("dt_proj"), impl)
                          + params["dt_bias"].astype(dt_))
     a = -jnp.exp(params["A_log"].astype(jnp.float32))
     da = jnp.exp(dt.astype(jnp.float32)[..., None] * a)  # (B, dI, N)
@@ -126,33 +138,53 @@ def mamba_decode(params: dict, x: jax.Array, state: dict, cfg: ModelConfig
     y = jnp.einsum("bdn,bn->bd", h, cmat.astype(jnp.float32)).astype(dt_)
     y = y + xs_c * params["D"].astype(dt_)
     y = y * jax.nn.silu(z)
-    out = (y @ params["out_proj"].astype(dt_))[:, None]
+    out = matmul_or_bitmap(y, params["out_proj"], pk.get("out_proj"),
+                           impl)[:, None]
     return out, {"h": h, "conv": new_conv}
 
 # ---------------------------------------------------------------- RWKV6 ----
 
 
 def _rwkv_tokens(params: dict, x: jax.Array, x_prev: jax.Array,
-                 cfg: ModelConfig):
+                 cfg: ModelConfig, packed: Optional[dict] = None,
+                 impl: Optional[str] = None):
     """Shared r/k/v/w/g preparation. x: (B, S, D); x_prev: (B, S, D) is x
-    shifted right by one token (data-dependent token-shift, Finch)."""
+    shifted right by one token (data-dependent token-shift, Finch).
+    ``packed`` (decode path only) streams the projection GEMMs — w_r/k/v/g,
+    decay_A/decay_B, mix_A and the 5-way group-stacked mix_B —
+    bitmap-compressed."""
+    pk = packed or {}
     dt_ = x.dtype
     diff = x_prev - x
     # low-rank data-dependent lerp amounts for r,k,v,w,g
-    lora = jnp.tanh(x @ params["mix_A"].astype(dt_))     # (B,S,5*rank)
+    lora = jnp.tanh(matmul_or_bitmap(x, params["mix_A"], pk.get("mix_A"),
+                                     impl))              # (B,S,5*rank)
     lora = lora.reshape(*x.shape[:-1], 5, -1)
-    dyn = jnp.einsum("bsfr,frd->bsfd", lora, params["mix_B"].astype(dt_))
+    if pk.get("mix_B") is None:
+        dyn = jnp.einsum("bsfr,frd->bsfd", lora, params["mix_B"].astype(dt_))
+    else:
+        # group-stacked dispatch: the 5 lerp channels are 5 independent
+        # (rank, D) GEMMs — the same layout as an MoE expert stack
+        from repro.kernels import ops
+        b_, s_, f_, r_ = lora.shape
+        lx = jnp.moveaxis(lora, 2, 0).reshape(f_, b_ * s_, r_)
+        dyn = jnp.moveaxis(
+            ops.bitmap_spmm_grouped(lx, pk["mix_B"], impl=impl)
+            .reshape(f_, b_, s_, -1), 0, 2)
     mix = params["mix_mu"].astype(dt_) + dyn             # (B,S,5,D)
     xr, xk, xv, xw, xg = [x + diff * mix[..., i, :] for i in range(5)]
 
-    r = xr @ params["w_r"].astype(dt_)
-    k = xk @ params["w_k"].astype(dt_)
-    v = xv @ params["w_v"].astype(dt_)
-    g = jax.nn.silu(xg @ params["w_g"].astype(dt_))
+    r = matmul_or_bitmap(xr, params["w_r"], pk.get("w_r"), impl)
+    k = matmul_or_bitmap(xk, params["w_k"], pk.get("w_k"), impl)
+    v = matmul_or_bitmap(xv, params["w_v"], pk.get("w_v"), impl)
+    g = jax.nn.silu(matmul_or_bitmap(xg, params["w_g"], pk.get("w_g"),
+                                     impl))
     # data-dependent decay (the headline Finch feature)
-    ww = params["w0"].astype(jnp.float32) + jnp.tanh(
-        xw @ params["decay_A"].astype(dt_)).astype(jnp.float32) @ \
-        params["decay_B"].astype(jnp.float32)
+    ww = params["w0"].astype(jnp.float32) + matmul_or_bitmap(
+        jnp.tanh(matmul_or_bitmap(xw, params["decay_A"],
+                                  pk.get("decay_A"), impl)
+                 ).astype(jnp.float32),
+        params["decay_B"], pk.get("decay_B"), impl)
     w = jnp.exp(-jnp.exp(ww))                            # (B,S,D) in (0,1)
     return r, k, v, w, g
 
@@ -208,12 +240,16 @@ def rwkv_mix(params: dict, x: jax.Array, cfg: ModelConfig,
     return out @ params["w_o"].astype(x.dtype)
 
 
-def rwkv_decode(params: dict, x: jax.Array, state: dict, cfg: ModelConfig
+def rwkv_decode(params: dict, x: jax.Array, state: dict, cfg: ModelConfig,
+                packed: Optional[dict] = None, impl: Optional[str] = None
                 ) -> Tuple[jax.Array, dict]:
-    """One-token RWKV6 step. state: {"s": (B,H,hd,hd), "x_prev": (B, D)}."""
+    """One-token RWKV6 step. state: {"s": (B,H,hd,hd), "x_prev": (B, D)}.
+    ``packed`` streams the mixer's projection GEMMs bitmap-compressed
+    (serve time; see repro.serve.packed)."""
     b, _, d = x.shape
     h, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
-    r, k, v, w, g = _rwkv_tokens(params, x, state["x_prev"][:, None], cfg)
+    r, k, v, w, g = _rwkv_tokens(params, x, state["x_prev"][:, None], cfg,
+                                 packed=packed, impl=impl)
     rt = r[:, 0].reshape(b, h, hd).astype(jnp.float32)
     kt = k[:, 0].reshape(b, h, hd).astype(jnp.float32)
     vt = v[:, 0].reshape(b, h, hd).astype(jnp.float32)
@@ -224,19 +260,25 @@ def rwkv_decode(params: dict, x: jax.Array, state: dict, cfg: ModelConfig
     new_s = wt[..., :, None] * state["s"] + kv
     out = out.reshape(b, 1, h * hd).astype(x.dtype)
     out = group_norm_heads(out, params["gn_scale"], h) * g
-    return out @ params["w_o"].astype(x.dtype), {
-        "s": new_s, "x_prev": x[:, 0]}
+    return matmul_or_bitmap(out, params["w_o"], (packed or {}).get("w_o"),
+                            impl), {"s": new_s, "x_prev": x[:, 0]}
 
 
 def rwkv_channel_mix(params: dict, x: jax.Array, cfg: ModelConfig,
-                     x_prev: jax.Array | None = None) -> jax.Array:
-    """RWKV channel-mix FFN (squared-relu). Works for (B,S,D) and decode."""
+                     x_prev: jax.Array | None = None,
+                     packed: Optional[dict] = None,
+                     impl: Optional[str] = None) -> jax.Array:
+    """RWKV channel-mix FFN (squared-relu). Works for (B,S,D) and decode.
+    ``packed`` streams cm_k/cm_v/cm_r bitmap-compressed (serve time)."""
+    pk = packed or {}
     dt_ = x.dtype
     if x_prev is None:
         x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
     mu = params["cm_mu"].astype(dt_)                     # (2, D)
     xk = x + (x_prev - x) * mu[0]
     xr = x + (x_prev - x) * mu[1]
-    k = jnp.square(jax.nn.relu(xk @ params["cm_k"].astype(dt_)))
-    return jax.nn.sigmoid(xr @ params["cm_r"].astype(dt_)) * (
-        k @ params["cm_v"].astype(dt_))
+    k = jnp.square(jax.nn.relu(matmul_or_bitmap(xk, params["cm_k"],
+                                                pk.get("cm_k"), impl)))
+    return jax.nn.sigmoid(
+        matmul_or_bitmap(xr, params["cm_r"], pk.get("cm_r"), impl)
+    ) * matmul_or_bitmap(k, params["cm_v"], pk.get("cm_v"), impl)

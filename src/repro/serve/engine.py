@@ -27,10 +27,12 @@ system:
 * weights pruned once (``global_l1_prune``) and the *whole serve-time
   stack* packed once into the paper's ``BitmapWeight`` format
   (``repro.serve.packed.pack_model``): attention q/k/v/o, MLP
-  gate/up/down and the LM head all dispatch through
-  ``kernels/ops.bitmap_spmm`` every decode step — the bitmap-compressed
-  HBM path runs end-to-end at serve time, and the per-tensor manifest
-  records what packed vs fell back (and why).
+  gate/up/down, the MoE router + expert stacks, the mamba/rwkv mixer
+  and channel-mix projections, and the LM head all dispatch through
+  ``kernels/ops.bitmap_spmm`` (per-expert: ``bitmap_spmm_grouped``)
+  every decode step — the bitmap-compressed HBM path runs end-to-end at
+  serve time, and the per-tensor manifest records what packed vs fell
+  back (and why).  DESIGN_PACKED.md documents the subsystem.
 
 Positions are per-slot: the decode step takes a (B,) position vector so
 each slot advances through its own sequence independently (the models
@@ -105,10 +107,11 @@ class ServeEngine:
         dense head).
 
         ``stream_weights``: pack the whole decode stack (attention
-        q/k/v/o + MLP gate/up/down) once via ``pack_model`` and stream it
-        bitmap-compressed every step.  Packing is lossless, so tokens are
-        identical to dense dispatch at any sparsity; pass False for a
-        dense-dispatch baseline.
+        q/k/v/o, MLP gate/up/down, MoE router + expert stacks, SSM
+        mixer / channel-mix projections) once via ``pack_model`` and
+        stream it bitmap-compressed every step.  Packing is lossless, so
+        tokens are identical to dense dispatch at any sparsity; pass
+        False for a dense-dispatch baseline.
 
         ``top_k``: engine-default top-k truncation for sampled requests
         (0 = no truncation); each request may override it via
@@ -556,20 +559,39 @@ class ServeEngine:
         Embeddings are excluded: the token lookup gathers B rows, it does
         not stream the table.  The head term is the packed head's bitmap
         bytes, or its dense bytes when the head fell back.
+
+        MoE expert stacks count once per *activated* expert per step —
+        with ``num_slots`` slots each routing to ``top_k`` experts, a
+        decode step touches at most ``min(E, num_slots × top_k)`` experts
+        — not once per stored expert (accounting rule in
+        DESIGN_PACKED.md §traffic model).
         """
         head_dense = (self.cfg.d_model * self.cfg.vocab_size
                       * np.dtype(np.float32).itemsize)
         head_sparse = (self.lm_weight.hbm_bytes
                        if self.lm_weight is not None else head_dense)
+        activated = (self.num_slots * self.cfg.top_k
+                     if self.cfg.num_experts else None)
         if self.packed is not None:
-            rep = self.packed.stream_report()
+            rep = self.packed.stream_report(activated_experts=activated)
         else:
-            dense = sum(
-                int(np.prod(l.shape)) * l.dtype.itemsize
-                for l in jax.tree_util.tree_leaves(self.params["blocks"]))
+            # dense-dispatch baseline: same accounting rule, same code —
+            # router-gated expert stacks stream once per activated expert
+            from repro.serve.packed import ROUTED_EXPERT, activated_scale
+            dense = 0
+            for bdict in self.params["blocks"].values():
+                for comp, tensors in bdict.items():
+                    for name, leaf in tensors.items():
+                        b = int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+                        routed = (leaf.shape[1]
+                                  if (comp, name) in ROUTED_EXPERT
+                                  and leaf.ndim == 4 else 0)
+                        dense += int(round(
+                            b * activated_scale(routed, activated)))
             rep = {"sparse_bytes_per_step": dense,
                    "dense_bytes_per_step": dense, "reduction": 1.0,
                    "packed_tensors": 0, "fallback_tensors": 0,
+                   "activated_experts": activated,
                    "fallbacks": {"*": self.stream_fallback
                                  or "stream_weights=False"}}
         sparse = rep["sparse_bytes_per_step"] + head_sparse

@@ -2,23 +2,55 @@
 bitmap-compressed on every decode step.
 
 ``pack_model`` walks the params tree (the ``param_shapes`` inventory,
-stacked over periods) and, for every serve-time
-projection with a compressed dispatch path — attention ``wq/wk/wv/wo``
-and MLP ``w_gate/w_up/w_down`` — selects the largest valid ``(BK, BN)``
-bitmap tile and packs the (already pruned) tensor, period-stacked, into
-one ``BitmapWeight`` per tensor.  The result is a pytree mirroring
-``params["blocks"]`` (``BitmapWeight`` leaves where packed, ``None``
-where dense) that threads through ``build_serve_step`` → ``decode_step``
-→ ``decode_hidden`` → ``layers.mlp`` / ``_decode_attn``, so the per-step
-matmuls dispatch via ``kernels/ops.bitmap_spmm`` instead of dense ``@``.
+stacked over periods) and packs every serve-time GEMM operand into one
+``BitmapWeight`` per tensor, choosing the largest valid ``(BK, BN)``
+tile per shape:
 
-Every tensor that cannot pack falls back to dense *with a recorded
-reason* (no valid tile, not a 2-D projection, no compressed dispatch
-path yet, …) in a per-tensor manifest that also carries the modeled
-per-step HBM bytes — sparse (bitmap) vs dense — which
-``ServeEngine.report()`` aggregates across the whole stack.  This is the
-paper's regime end-to-end: EIE runs *every* FC layer from compressed
-storage; here the entire decode stack streams the bitmap format.
+* **period-stacked 2-D projections** (``pack_bitmap_stacked``):
+  attention ``wq/wk/wv/wo``, MLP ``w_gate/w_up/w_down``, the MoE
+  ``router``, mamba ``in/x/dt/out`` projections, rwkv
+  ``w_r/w_k/w_v/w_g/w_o``, ``decay_A/decay_B``, ``mix_A`` and the
+  rwkv channel-mix ``cm_k/cm_v/cm_r``;
+* **group-stacked expert tensors** (``pack_bitmap_experts``): MoE
+  ``w_gate/w_up/w_down`` — a ``(P, E, D, F)`` stack whose per-expert
+  slices dispatch through ``kernels/ops.bitmap_spmm_grouped`` — and
+  rwkv's 5-way lerp stack ``mix_B``, which shares the layout.
+
+The result is a pytree mirroring ``params["blocks"]`` (``BitmapWeight``
+leaves where packed, ``None`` where dense) that threads through
+``build_serve_step`` → ``decode_step`` → ``decode_hidden`` (and the
+chunked-prefill path ``build_prefill_step`` → ``prefill_hidden``) into
+``layers.matmul_or_bitmap`` / ``layers.expert_matmul_or_bitmap`` and the
+ssm decode cells, so the per-step matmuls dispatch via
+``kernels/ops.bitmap_spmm`` / ``bitmap_spmm_grouped`` instead of dense
+``@``.
+
+Invariants (DESIGN_PACKED.md has the full subsystem doc):
+
+* **Packing is lossless** — the per-tensor value-slot budget equals the
+  max tile non-zero count, so the packed stream is numerically identical
+  to dense dispatch of the same (pruned) weights; compression comes only
+  from upstream pruning.
+* **Every fallback carries a reason** — a tensor that cannot pack is
+  served dense with the reason recorded in the manifest (no valid tile,
+  unexpected rank, not a GEMM operand, …); nothing silently degrades.
+* **Modeled bytes are the compressed stream the kernel actually
+  fetches** — a pack-time ``dense_cache`` (the xla-oracle rendering)
+  never counts toward ``hbm_bytes``.
+* **Router-gated expert stacks account per *activated* expert** — a
+  gather-dispatch serving engine streams only the experts the router
+  selected, so ``stream_report(activated_experts=...)`` scales those
+  entries by ``min(E, activated) / E`` (the engine passes
+  ``num_slots × top_k``, the per-step worst case) whether the stack
+  packed or fell back; always-active group stacks (rwkv ``mix_B``) and
+  everything else count in full.  Note the repo's capacity-dispatch
+  reference *executes* all stored experts (like the xla oracle, it
+  models the accelerator's dataflow rather than reproducing it) —
+  DESIGN_PACKED.md §6 spells out modeled vs executed.
+
+This is the paper's regime end-to-end: EIE runs *every* FC layer from
+compressed storage; here the entire decode stack — MoE expert stacks
+and SSM mixers included — streams the bitmap format.
 """
 from __future__ import annotations
 
@@ -27,14 +59,40 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.sparse.format import BitmapWeight, pack_bitmap_stacked
+from repro.sparse.format import (BitmapWeight, pack_bitmap_experts,
+                                 pack_bitmap_stacked)
 
-# (component, tensor) pairs with a compressed dispatch path in the decode
-# step.  Everything else records a fallback reason in the manifest.
-DISPATCHABLE = {
+# (component, tensor) pairs with a compressed dispatch path in the
+# decode step.  2-D entries are period-stacked projections; GROUPED
+# entries are (P, G, K, N) stacks dispatched per group.  Everything else
+# records a fallback reason in the manifest.
+DISPATCHABLE_2D = {
     ("attn", "wq"), ("attn", "wk"), ("attn", "wv"), ("attn", "wo"),
     ("mlp", "w_gate"), ("mlp", "w_up"), ("mlp", "w_down"),
+    ("moe", "router"),
+    ("mamba", "in_proj"), ("mamba", "x_proj"), ("mamba", "dt_proj"),
+    ("mamba", "out_proj"),
+    ("rwkv", "w_r"), ("rwkv", "w_k"), ("rwkv", "w_v"), ("rwkv", "w_g"),
+    ("rwkv", "w_o"), ("rwkv", "decay_A"), ("rwkv", "decay_B"),
+    ("rwkv", "mix_A"),
+    ("rwkv_cm", "cm_k"), ("rwkv_cm", "cm_v"), ("rwkv_cm", "cm_r"),
 }
+DISPATCHABLE_GROUPED = {
+    ("moe", "w_gate"), ("moe", "w_up"), ("moe", "w_down"),
+    ("rwkv", "mix_B"),
+}
+# router-gated expert stacks: per-step traffic scales with *activated*
+# experts (rwkv's mix_B is group-stacked but always fully active)
+ROUTED_EXPERT = {("moe", "w_gate"), ("moe", "w_up"), ("moe", "w_down")}
+
+
+def activated_scale(experts: int, activated: Optional[int]) -> float:
+    """The accounting rule, single-sourced: router-gated expert stacks
+    stream ``min(E, activated)`` of their ``E`` stored experts per step
+    (``experts == 0`` or ``activated is None`` ⇒ no scaling)."""
+    if not experts or activated is None:
+        return 1.0
+    return min(experts, activated) / experts
 
 
 def choose_block(k: int, n: int, cap: int = 128
@@ -50,7 +108,15 @@ def choose_block(k: int, n: int, cap: int = 128
 
 @dataclasses.dataclass
 class PackEntry:
-    """Manifest row: one tensor's pack decision + modeled per-step bytes."""
+    """Manifest row: one tensor's pack decision + modeled per-step bytes.
+
+    ``sparse_bytes``/``dense_bytes`` are *stored-stack* totals (all
+    periods, all experts); the per-activated-expert scaling happens in
+    ``PackedModel.stream_report``.  ``layout`` is ``"stacked"``
+    (period-stacked 2-D), ``"grouped"`` (expert/group stack) or
+    ``"dense"`` (fallback).  ``experts`` is the stored expert count for
+    router-gated stacks (0 otherwise).
+    """
 
     path: str
     shape: Tuple[int, ...]
@@ -60,6 +126,8 @@ class PackEntry:
     sparsity: float                  # measured zero fraction
     sparse_bytes: int                # streamed per step on the chosen path
     dense_bytes: int
+    layout: str = "dense"
+    experts: int = 0
 
 
 @dataclasses.dataclass
@@ -77,17 +145,32 @@ class PackedModel:
     def fallback_entries(self) -> List[PackEntry]:
         return [e for e in self.manifest if not e.packed]
 
-    def stream_report(self) -> Dict:
+    def stream_report(self, activated_experts: Optional[int] = None) -> Dict:
         """Modeled per-step weight-HBM bytes across the stack (no head —
-        the engine adds its head term on top)."""
-        sparse = sum(e.sparse_bytes for e in self.manifest)
-        dense = sum(e.dense_bytes for e in self.manifest)
+        the engine adds its head term on top).
+
+        ``activated_experts`` (the engine passes ``num_slots × top_k``):
+        router-gated expert stacks stream only the experts the router
+        selected, so their stored-stack bytes scale by
+        ``min(E, activated) / E`` — on the sparse *and* the dense side,
+        since a gather-dispatch dense baseline also fetches only
+        activated experts; the reduction therefore isolates the format,
+        not the gating (accounting rule in DESIGN_PACKED.md).
+        """
+        def step_bytes(e: PackEntry, attr: str) -> int:
+            return int(round(getattr(e, attr)
+                             * activated_scale(e.experts,
+                                               activated_experts)))
+
+        sparse = sum(step_bytes(e, "sparse_bytes") for e in self.manifest)
+        dense = sum(step_bytes(e, "dense_bytes") for e in self.manifest)
         return {
             "sparse_bytes_per_step": sparse,
             "dense_bytes_per_step": dense,
             "reduction": dense / sparse if sparse else 1.0,
             "packed_tensors": len(self.packed_entries),
             "fallback_tensors": len(self.fallback_entries),
+            "activated_experts": activated_experts,
             "fallbacks": {e.path: e.reason for e in self.fallback_entries},
         }
 
@@ -97,15 +180,37 @@ def _pack_leaf(path: str, comp: str, name: str, w, cap: int,
     arr = np.asarray(w)
     dense_bytes = arr.size * arr.dtype.itemsize
     sparsity = 1.0 - np.count_nonzero(arr) / max(arr.size, 1)
+    key = (comp, name)
+    # the activated-expert accounting applies to router-gated stacks
+    # whether they pack or fall back — a gather-dispatch dense baseline
+    # also fetches only the selected experts
+    routed = (arr.shape[1] if key in ROUTED_EXPERT and arr.ndim == 4
+              else 0)
 
     def fallback(reason: str) -> Tuple[PackEntry, None]:
         return PackEntry(path=path, shape=arr.shape, packed=False,
                          reason=reason, block=None, sparsity=sparsity,
                          sparse_bytes=dense_bytes,
-                         dense_bytes=dense_bytes), None
-
-    if (comp, name) not in DISPATCHABLE:
-        return fallback("no compressed dispatch path")
+                         dense_bytes=dense_bytes, experts=routed), None
+    if key in DISPATCHABLE_GROUPED:
+        if arr.ndim != 4:            # (P, G, K, N) = period × group stack
+            return fallback(f"group stack with unexpected rank "
+                            f"(ndim={arr.ndim}, want 4)")
+        _, g, k, n = arr.shape
+        block = choose_block(k, n, cap)
+        if block is None:
+            return fallback(
+                f"no (BK, BN) tile divides ({k}, {n}) with BN % 8")
+        bw = pack_bitmap_experts(arr, block=block, cache_dense=cache_dense)
+        entry = PackEntry(path=path, shape=arr.shape, packed=True, reason="",
+                          block=block, sparsity=sparsity,
+                          sparse_bytes=bw.hbm_bytes, dense_bytes=dense_bytes,
+                          layout="grouped", experts=routed)
+        return entry, bw
+    if key not in DISPATCHABLE_2D:
+        # every GEMM operand of the decode step is listed above; the rest
+        # are elementwise/state/conv tensors with no matmul to compress
+        return fallback("not a GEMM operand (elementwise/state/conv tensor)")
     if arr.ndim != 3:                # (P, K, N) = period-stacked projection
         return fallback(f"not a 2-D projection (ndim={arr.ndim - 1})")
     _, k, n = arr.shape
@@ -115,13 +220,14 @@ def _pack_leaf(path: str, comp: str, name: str, w, cap: int,
     bw = pack_bitmap_stacked(arr, block=block, cache_dense=cache_dense)
     entry = PackEntry(path=path, shape=arr.shape, packed=True, reason="",
                       block=block, sparsity=sparsity,
-                      sparse_bytes=bw.hbm_bytes, dense_bytes=dense_bytes)
+                      sparse_bytes=bw.hbm_bytes, dense_bytes=dense_bytes,
+                      layout="stacked")
     return entry, bw
 
 
 def pack_model(params: Dict, cap: int = 128,
                cache_dense: bool = False) -> PackedModel:
-    """Pack every dispatchable serve-time projection of ``params``.
+    """Pack every dispatchable serve-time GEMM operand of ``params``.
 
     Packing is lossless (per-tensor budget = max tile non-zero count), so
     the packed stream is numerically identical to dense dispatch — the

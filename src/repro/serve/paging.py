@@ -37,6 +37,22 @@ whenever ``ensure`` needs a page (tests/test_paging.py property-checks
 this along with no-double-free, no cross-slot aliasing and free-list
 conservation).  Out-of-pages is thus an *admission* condition — the
 request waits in the queue until retirements free pages — never a crash.
+
+Invariants (property-tested in tests/test_paging.py):
+
+* **Pages are never zeroed** — the validity mask in
+  ``layers.decode_attention`` (``slot_pos <= pos``, window bound)
+  excludes stale gathers, so a page handed from one request to another
+  needs no scrub; only O(1)-per-slot recurrent state is zeroed.
+* **A live page has exactly one writer** — its owning slot.  Idle or
+  masked-off lanes resolve to physical page 0 (the trash page), which
+  is reserved and never allocated.
+* **The free list is conserved and non-empty on demand** — a page is
+  free xor mapped by exactly one slot; commitments bound mapped pages,
+  so ``ensure``/``ensure_range`` cannot run dry mid-flight.
+* **Addressing is single-sourced** — ``model.paged_addressing`` defines
+  (capacity, ring) once for the host allocator and the device cache
+  write, so they cannot drift.
 """
 from __future__ import annotations
 

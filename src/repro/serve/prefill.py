@@ -28,6 +28,26 @@ The planner turns waiting prompts into fixed-shape prefill calls:
 
 The planner is pure host-side bookkeeping — the device work is
 ``models.model.prefill_hidden`` via ``launch.steps.build_prefill_step``.
+
+Invariants (equivalence-tested in tests/test_prefill.py and the
+full-matrix test in tests/test_packed_streaming.py):
+
+* **Bit-identical to teacher-forcing** — ``prefill_hidden`` writes then
+  attends one token at a time inside the chunk, so the cache state (and
+  therefore every sampled token) equals the ``prefill_chunk=0`` legacy
+  walk at every position, across windows/ring wraps, MoE (chunk folded
+  into the batch dim so capacity matches decode), contiguous and paged
+  caches, dense and packed weight streams.
+* **The last prompt token is never prefilled** — it feeds the first
+  real decode step, which samples the first generated token exactly
+  like the teacher-forcing path did.
+* **One jit signature** — every call is a padded ``(num_slots, chunk)``
+  batch with a per-slot length mask; ``lens == 0`` lanes write nothing
+  (contiguous lanes drop out of the scatter, paged lanes hit the trash
+  page).
+* **At most one prefill call per engine step** — decode never starves;
+  mid-prefill slots ride the decode batch as masked passengers parked
+  on their next unwritten position.
 """
 from __future__ import annotations
 

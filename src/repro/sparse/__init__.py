@@ -1,14 +1,16 @@
 """Framework-level sparsity: formats, pruning, sparse linear ops."""
 from repro.sparse.format import (BitmapWeight, BlockSparseWeight, pack_bitmap,
-                                 pack_bitmap_stacked, pack_block_sparse,
-                                 unpack_bitmap, unpack_bitmap_stacked,
+                                 pack_bitmap_experts, pack_bitmap_stacked,
+                                 pack_block_sparse, unpack_bitmap,
+                                 unpack_bitmap_experts, unpack_bitmap_stacked,
                                  unpack_block_sparse)
 from repro.sparse.pruning import (global_l1_prune, per_tensor_prune,
                                   sparsity_of)
 
 __all__ = [
     "BitmapWeight", "BlockSparseWeight", "pack_bitmap",
-    "pack_bitmap_stacked", "pack_block_sparse", "unpack_bitmap",
-    "unpack_bitmap_stacked", "unpack_block_sparse", "global_l1_prune",
-    "per_tensor_prune", "sparsity_of",
+    "pack_bitmap_experts", "pack_bitmap_stacked", "pack_block_sparse",
+    "unpack_bitmap", "unpack_bitmap_experts", "unpack_bitmap_stacked",
+    "unpack_block_sparse", "global_l1_prune", "per_tensor_prune",
+    "sparsity_of",
 ]

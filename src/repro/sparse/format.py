@@ -62,10 +62,12 @@ class BitmapWeight:
 
     @property
     def dense_bytes(self) -> int:
-        # period-stacked weights (pack_bitmap_stacked) carry a leading P
-        # axis on the arrays while `shape` stays per-period — count it
-        periods = self.values.shape[0] if self.values.ndim == 4 else 1
-        return (periods * self.shape[0] * self.shape[1]
+        # stacked weights (pack_bitmap_stacked: leading P axis;
+        # pack_bitmap_experts: leading (P, E) axes) carry extra leading
+        # dims on the arrays while `shape` stays per-matrix — count them
+        stacks = math.prod(self.values.shape[:-3]) if self.values.ndim > 3 \
+            else 1
+        return (stacks * self.shape[0] * self.shape[1]
                 * self.values.dtype.itemsize)
 
     @property
@@ -184,12 +186,53 @@ def pack_bitmap_stacked(w, block: Tuple[int, int],
 
 
 def unpack_bitmap_stacked(bw: BitmapWeight) -> jax.Array:
-    """Dense (P, K, N) oracle for a period-stacked ``BitmapWeight``."""
+    """Dense oracle for a stacked ``BitmapWeight``: recurses over every
+    leading stack axis (one for period-stacked tensors, two for the
+    (P, E) expert layout), returning ``(*stack_axes, K, N)``."""
+    if bw.values.ndim == 3:
+        return unpack_bitmap(bw)
     return jnp.stack([
-        unpack_bitmap(BitmapWeight(
+        unpack_bitmap_stacked(BitmapWeight(
             packed_bits=bw.packed_bits[i], values=bw.values[i],
             row_start=bw.row_start[i], shape=bw.shape, block=bw.block))
         for i in range(bw.packed_bits.shape[0])])
+
+
+def pack_bitmap_experts(w, block: Tuple[int, int],
+                        cache_dense: bool = False) -> BitmapWeight:
+    """Pack a period-stacked expert stack (P, E, K, N) into one
+    ``BitmapWeight`` whose array leaves carry leading (P, E) axes.
+
+    The expert analogue of ``pack_bitmap_stacked``: every (period,
+    expert) matrix shares the tile ``block`` and one value-slot
+    ``budget`` (the max tile non-zero count across the whole stack), so
+    the serve-time ``lax.scan`` over periods yields an (E, ...)-leading
+    ``BitmapWeight`` each iteration whose per-expert slices the grouped
+    kernel dispatch (``kernels/ops.bitmap_spmm_grouped``) consumes.
+    Packing is lossless — no re-pruning happens at pack time.
+
+    Also used for non-router group stacks with the same dataflow (e.g.
+    RWKV6's 5-way low-rank lerp stack ``mix_B``): any (P, G, K, N)
+    tensor consumed as G independent (K, N) GEMMs packs this way.
+    """
+    w = np.asarray(w)
+    assert w.ndim == 4, w.shape
+    p, e, k, n = w.shape
+    flat = pack_bitmap_stacked(w.reshape(p * e, k, n), block=block,
+                               cache_dense=cache_dense)
+    return BitmapWeight(
+        packed_bits=flat.packed_bits.reshape(
+            (p, e) + flat.packed_bits.shape[1:]),
+        values=flat.values.reshape((p, e) + flat.values.shape[1:]),
+        row_start=flat.row_start.reshape((p, e) + flat.row_start.shape[1:]),
+        shape=(k, n), block=block,
+        dense_cache=(flat.dense_cache.reshape(p, e, k, n)
+                     if cache_dense else None))
+
+
+def unpack_bitmap_experts(bw: BitmapWeight) -> jax.Array:
+    """Dense (P, E, K, N) oracle for an expert-stacked ``BitmapWeight``."""
+    return unpack_bitmap_stacked(bw)
 
 
 @jax.tree_util.register_dataclass

@@ -66,9 +66,9 @@ def test_pack_model_manifest_records_fallbacks():
     pm = eng.packed
     packed_paths = {e.path for e in pm.packed_entries}
     assert any("attn/wq" in p for p in packed_paths)
-    # MoE expert tensors are 3-D per period: recorded dense with a reason
+    # MoE expert stacks ride the grouped bitmap layout since PR 5
+    assert any("moe/w_gate" in p for p in packed_paths)
     fb = {e.path: e.reason for e in pm.fallback_entries}
-    assert any("moe" in p for p in fb)
     assert all(r for r in fb.values())
     ws = eng.report()["weight_stream"]
     assert ws["sparse_bytes_per_step"] < ws["dense_bytes_per_step"]
@@ -103,6 +103,62 @@ def test_stacked_pack_roundtrip():
     np.testing.assert_array_equal(np.asarray(unpack_bitmap_stacked(bw)), w)
 
 
+def test_expert_pack_roundtrip_properties():
+    """Property tests for the (P, E, K, N) expert layout: packing is
+    lossless for any stack shape/sparsity, the value-slot budget is
+    shared (= max tile non-zero count across the whole stack), and the
+    grouped dispatch equals the dense per-expert einsum on both the xla
+    ref and the interpreted Pallas kernel."""
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    from repro.kernels import ops
+    from repro.kernels.bitmap_spmm import group_slice
+    from repro.sparse.format import (BitmapWeight, pack_bitmap_experts,
+                                     unpack_bitmap_experts)
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(1, 2), st.integers(1, 4),
+           st.sampled_from([16, 32, 64]), st.sampled_from([8, 16, 32]),
+           st.floats(0.0, 0.95), st.integers(0, 2 ** 31 - 1))
+    def check(p, e, k, n, sparsity, seed):
+        r = np.random.default_rng(seed)
+        w = r.standard_normal((p, e, k, n)).astype(np.float32)
+        w *= r.random((p, e, k, n)) >= sparsity
+        bw = pack_bitmap_experts(w, block=(k, n))
+        assert bw.packed_bits.shape[:2] == (p, e)
+        np.testing.assert_array_equal(np.asarray(unpack_bitmap_experts(bw)),
+                                      w)
+        tile_nnz = (w != 0).reshape(p * e, -1).sum(-1)
+        assert bw.budget == max(1, int(tile_nnz.max()))
+        # grouped dispatch == per-expert dense matmul (one period slice)
+        per = BitmapWeight(packed_bits=bw.packed_bits[0],
+                           values=bw.values[0], row_start=bw.row_start[0],
+                           shape=bw.shape, block=bw.block)
+        x = r.standard_normal((e, 3, k)).astype(np.float32)
+        want = np.einsum("gmk,gkn->gmn", x, w[0])
+        got = ops.bitmap_spmm_grouped(x, per, impl="xla")
+        np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5,
+                                   atol=2e-5)
+        assert np.asarray(group_slice(per, e - 1).values).shape == \
+            bw.values.shape[2:]
+
+    check()
+
+    # the interpreted Pallas kernel agrees on one representative stack
+    r = np.random.default_rng(7)
+    w = r.standard_normal((3, 64, 32)).astype(np.float32)
+    w *= r.random((3, 64, 32)) >= 0.7
+    bw = pack_bitmap_experts(w[None], block=(64, 32))
+    per = BitmapWeight(packed_bits=bw.packed_bits[0], values=bw.values[0],
+                       row_start=bw.row_start[0], shape=bw.shape,
+                       block=bw.block)
+    x = r.standard_normal((3, 4, 64)).astype(np.float32)
+    got = ops.bitmap_spmm_grouped(x, per, impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(got),
+                               np.einsum("gmk,gkn->gmn", x, w),
+                               rtol=1e-4, atol=1e-4)
+
+
 def test_head_fallback_is_surfaced():
     """A head that no (BK, BN) tile divides must warn and report the
     fallback instead of silently claiming head_compression=1.0."""
@@ -121,6 +177,163 @@ def test_head_fallback_is_surfaced():
     rep = eng.report()
     assert rep["head_fallback"] == eng.head_fallback
     assert rep["head_compression"] == 1.0
+
+
+# -------------------------------------------- full-stack coverage (PR 5) ---
+#
+# MoE expert stacks and SSM mixer projections ride the compressed bitmap
+# path: token equivalence across the 5-arch × 2-sparsity × {decode,
+# chunked prefill} × {contiguous, paged} matrix, a manifest snapshot
+# locking per-arch fallbacks, expert-layout roundtrip properties, and
+# the per-activated-expert traffic accounting rule.
+
+
+def _mamba_smoke_cfg():
+    """Pure-mamba decode cell (no registry arch is mamba-only; jamba
+    interleaves).  d_state=6 makes x_proj's column count (dtr + 2N = 16)
+    tileable, so all four mamba GEMMs pack."""
+    return ModelConfig(
+        name="mamba-smoke", d_model=64, num_layers=2, num_heads=4,
+        num_kv_heads=4, d_ff=128, vocab_size=256,
+        pattern=(BlockCfg(mixer="mamba", ffn="mlp"),),
+        mamba_d_state=6, mamba_expand=2, mamba_conv=4,
+        norm="rmsnorm", act="silu", tie_embeddings=False, max_seq_len=64)
+
+
+MATRIX_ARCHS = ["granite-moe-3b-a800m", "moonshot-v1-16b-a3b",
+                "jamba-v0.1-52b", "mamba", "rwkv6-3b"]
+
+
+def _matrix_cfg(arch):
+    return _mamba_smoke_cfg() if arch == "mamba" else get_smoke_config(arch)
+
+
+_ORACLE_TOKENS = {}     # (cfg.name, sparsity) -> dense decode tokens
+
+
+def _oracle_tokens(cfg, sparsity):
+    key = (cfg.name, sparsity)
+    if key not in _ORACLE_TOKENS:
+        _ORACLE_TOKENS[key] = _run_tokens(cfg, stream=False,
+                                          sparsity=sparsity,
+                                          n_requests=3)[0]
+    return _ORACLE_TOKENS[key]
+
+
+@pytest.mark.parametrize("paged", [False, True], ids=["contig", "paged"])
+@pytest.mark.parametrize("mode", ["decode", "prefill"])
+@pytest.mark.parametrize("arch", MATRIX_ARCHS)
+def test_full_stack_packed_matrix(arch, mode, paged):
+    """The fully-packed engine — MoE expert stacks, SSM mixers, router
+    and channel-mix included — reproduces the dense contiguous decode
+    oracle token-for-token at sparsity 0 and 0.75, under chunked prefill
+    and paging.  Archs whose engine records a fallback for a mode
+    (recurrent mixers under prefill, attention-free archs under paging)
+    still serve token-identically through the fallback."""
+    cfg = _matrix_cfg(arch)
+    kw = {}
+    if mode == "prefill":
+        kw["prefill_chunk"] = 2
+    if paged:
+        kw.update(paged=True, page_len=8)
+    for sparsity in (0.0, 0.75):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            toks, eng = _run_tokens(cfg, stream=True, sparsity=sparsity,
+                                    head_sparsity=0.0, n_requests=3, **kw)
+        assert toks == _oracle_tokens(cfg, sparsity), (arch, mode, paged,
+                                                       sparsity)
+        assert all(t for t in toks)
+        # the retired blanket reason must never reappear
+        assert not any(e.reason == "no compressed dispatch path"
+                       for e in eng.packed.manifest)
+
+
+# Per-arch fallback snapshot: the exact (component, tensor) classes that
+# may serve dense.  Everything is either a non-GEMM tensor (norms, conv,
+# elementwise SSM state maps) or a smoke shape no (BK, BN) tile divides
+# (granite's 5-way router, jamba's 16-wide x_proj columns... which is
+# 12 here).  A regression that silently drops a GEMM class to dense —
+# or grows a new fallback — fails this snapshot.
+EXPECTED_FALLBACKS = {
+    "granite-moe-3b-a800m": {("attn", "norm"), ("moe", "norm"),
+                             ("moe", "router")},         # router (64, 5)
+    "moonshot-v1-16b-a3b": {("attn", "norm"), ("moe", "norm")},
+    "jamba-v0.1-52b": {("attn", "norm"), ("mlp", "norm"), ("moe", "norm"),
+                       ("moe", "router"),                # router (64, 4)
+                       ("mamba", "norm"), ("mamba", "conv_w"),
+                       ("mamba", "conv_b"), ("mamba", "dt_bias"),
+                       ("mamba", "A_log"), ("mamba", "D"),
+                       ("mamba", "x_proj")},             # x_proj (128, 12)
+    "mamba": {("mlp", "norm"), ("mamba", "norm"), ("mamba", "conv_w"),
+              ("mamba", "conv_b"), ("mamba", "dt_bias"),
+              ("mamba", "A_log"), ("mamba", "D")},
+    "rwkv6-3b": {("rwkv", "norm"), ("rwkv", "mix_mu"), ("rwkv", "w0"),
+                 ("rwkv", "u"), ("rwkv", "gn_scale"),
+                 ("rwkv_cm", "norm"), ("rwkv_cm", "cm_mu")},
+}
+
+
+@pytest.mark.parametrize("arch", MATRIX_ARCHS)
+def test_manifest_fallback_snapshot(arch):
+    """Zero unexpected fallbacks per arch family, and every fallback is
+    a non-GEMM tensor or an un-tileable smoke shape — never a GEMM class
+    missing its dispatch path."""
+    import jax
+    from repro.models.model import init_params
+    cfg = _matrix_cfg(arch)
+    pm = pack_model(init_params(jax.random.PRNGKey(0), cfg))
+    got = {tuple(e.path.split("/")[-2:]) for e in pm.fallback_entries}
+    assert got == EXPECTED_FALLBACKS[arch], (arch, got)
+    for e in pm.fallback_entries:
+        assert ("not a GEMM operand" in e.reason
+                or "no (BK, BN) tile" in e.reason), (e.path, e.reason)
+    # expert stacks carry the grouped layout and their stored count;
+    # rwkv's always-active mix_B is grouped but not router-gated
+    for e in pm.packed_entries:
+        comp, name = e.path.split("/")[-2:]
+        if comp == "moe" and name in ("w_gate", "w_up", "w_down"):
+            assert e.layout == "grouped" and e.experts == cfg.num_experts
+        elif (comp, name) == ("rwkv", "mix_B"):
+            assert e.layout == "grouped" and e.experts == 0
+        else:
+            assert e.layout == "stacked" and e.experts == 0
+
+
+def test_expert_stream_accounting():
+    """report()["weight_stream"] counts expert tensors once per
+    *activated* expert per step (min(E, num_slots·top_k)), not once per
+    stored expert — and matches a by-hand aggregation of the manifest."""
+    cfg = get_smoke_config("granite-moe-3b-a800m")   # E=5, moe top_k=2
+    eng = ServeEngine(cfg, num_slots=2, max_len=16, sparsity=0.5, seed=0,
+                      head_sparsity=0.0)
+    ws = eng.report()["weight_stream"]
+    activated = min(cfg.num_experts, 2 * cfg.top_k)  # 4 of 5 experts
+    assert ws["activated_experts"] == 2 * cfg.top_k
+
+    def scaled(e, attr):
+        b = getattr(e, attr)
+        if e.experts:
+            b = int(round(b * min(e.experts, ws["activated_experts"])
+                          / e.experts))
+        return b
+
+    # granite's smoke vocab (255, deliberately non-divisible) makes the
+    # head fall back to dense, so both sides carry the dense head term
+    head_dense = cfg.d_model * cfg.vocab_size * 4
+    head = (eng.lm_weight.hbm_bytes if eng.lm_weight is not None
+            else head_dense)
+    want_sparse = head + sum(scaled(e, "sparse_bytes")
+                             for e in eng.packed.manifest)
+    want_dense = head_dense + sum(scaled(e, "dense_bytes")
+                                  for e in eng.packed.manifest)
+    assert ws["sparse_bytes_per_step"] == want_sparse
+    assert ws["dense_bytes_per_step"] == want_dense
+    # the activation scaling actually bites: stored-stack totals are
+    # strictly larger than the per-step activated accounting
+    stored = head + sum(e.sparse_bytes for e in eng.packed.manifest)
+    assert want_sparse < stored
+    assert activated == 4
 
 
 # ---------------------------------------------------------- sampling -------
