@@ -32,4 +32,9 @@ PYTHONPATH=src python benchmarks/prefill.py --smoke \
     --chunks 8 --slots 2 --requests 6 --max-len 64 --repeats 2 \
     --out BENCH_serve.json
 
+echo "== bench smoke: shared-prefix COW reuse + preemption -> BENCH_serve.json (prefix_reuse) =="
+PYTHONPATH=src python benchmarks/prefix_reuse.py --smoke \
+    --requests 10 --max-len 64 --repeats 2 \
+    --out BENCH_serve.json
+
 echo "CI OK"

@@ -62,7 +62,8 @@ def serve_trace(arch: str, smoke: bool = True, slots: int = 4,
                 temperature: float = 0.0, top_k: int = 0,
                 paged: bool = False, page_len: int = 16,
                 page_pool_tokens: int | None = None,
-                prefill_chunk: int = 0,
+                prefill_chunk: int = 0, prefix_reuse: bool = False,
+                preempt: bool = False,
                 verbose: bool = True) -> dict:
     """Continuous-batching mode: seeded Poisson arrivals into the engine.
 
@@ -79,6 +80,11 @@ def serve_trace(arch: str, smoke: bool = True, slots: int = 4,
     ``prefill_chunk``-token prefill calls instead of teacher-forcing
     them one token per decode step (0 = the legacy walk); tokens are
     identical either way.
+    ``prefix_reuse`` (with ``paged``) maps requests' matching prompt
+    prefixes copy-on-write onto already-resident KV pages and skips
+    their prefill; ``preempt`` commits live pages only and reclaims by
+    preempting + recomputing the youngest slot when the pool runs dry.
+    Tokens are identical with both on or off.
     """
     eng = ServeEngine.from_arch(arch, smoke=smoke, num_slots=slots,
                                 max_len=max_len, sparsity=sparsity,
@@ -88,7 +94,9 @@ def serve_trace(arch: str, smoke: bool = True, slots: int = 4,
                                 bitmap_head=stream_weights, top_k=top_k,
                                 paged=paged, page_len=page_len,
                                 page_pool_tokens=page_pool_tokens,
-                                prefill_chunk=prefill_chunk)
+                                prefill_chunk=prefill_chunk,
+                                prefix_reuse=prefix_reuse,
+                                preempt=preempt)
     prompt_len = (1, min(4, max_len))
     hi = max(1, min(max_new[1], max_len - prompt_len[1] + 1))
     lo = max(1, min(max_new[0], hi))
@@ -133,6 +141,25 @@ def serve_trace(arch: str, smoke: bool = True, slots: int = 4,
                   f"({pg['reserved_reduction']:.2f}x)")
         elif pg["fallback"]:
             print(f"  paging fallback: {pg['fallback']}")
+        pr = rep["prefix_reuse"]
+        if pr["enabled"]:
+            split = ""
+            if pr["hit_requests"] and pr["miss_requests"]:
+                split = (f" | TTFT p50 hit "
+                         f"{pr['ttft_hit_s']['p50'] * 1e3:.1f}ms vs miss "
+                         f"{pr['ttft_miss_s']['p50'] * 1e3:.1f}ms")
+            print(f"prefix reuse: {pr['hits']} hits / {pr['misses']} "
+                  f"misses ({pr['hit_tokens']} tokens adopted, "
+                  f"{pr['forks']} COW forks, {pr['evictions']} "
+                  f"evictions){split}")
+        elif pr["fallback"]:
+            print(f"  prefix-reuse fallback: {pr['fallback']}")
+        pe = pr["preempt"]
+        if pe["enabled"]:
+            print(f"preemption: {pe['count']} preempts, "
+                  f"{pe['recomputed_tokens']} tokens recomputed")
+        elif pe["fallback"]:
+            print(f"  preempt fallback: {pe['fallback']}")
         print(f"{rep['requests']} requests / {rep['generated_tokens']} "
               f"tokens in {rep['wall_s']:.2f}s over {slots} slots "
               f"(occupancy {rep['slot_occupancy']:.0%})")
@@ -178,6 +205,14 @@ def main():
                     help="ingest prompts in batched chunks of this many "
                          "tokens per prefill call (0 = legacy teacher-"
                          "forcing through decode steps)")
+    ap.add_argument("--prefix-reuse", action="store_true",
+                    help="share matching prompt prefixes copy-on-write "
+                         "across requests (with --paged): cache hits "
+                         "skip prefill entirely")
+    ap.add_argument("--preempt", action="store_true",
+                    help="commit live pages only and reclaim by "
+                         "preempting + recomputing the youngest slot "
+                         "when the pool runs dry (with --paged)")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -190,6 +225,7 @@ def main():
                 paged=args.paged, page_len=args.page_len,
                 page_pool_tokens=args.page_pool_tokens,
                 prefill_chunk=args.prefill_chunk,
+                prefix_reuse=args.prefix_reuse, preempt=args.preempt,
                 seed=args.seed, model_parallel=args.model_parallel)
 
 

@@ -5,15 +5,17 @@ from repro.serve.cache import SlotKVCache
 from repro.serve.engine import ServeEngine, pack_lm_head
 from repro.serve.packed import (PackedModel, PackEntry, choose_block,
                                 pack_model)
-from repro.serve.paging import PagedKVCache, PagePool
+from repro.serve.paging import (OutOfPages, PagedKVCache, PagePool,
+                                PrefixBlock)
 from repro.serve.prefill import PrefillJob, PrefillPlanner
 from repro.serve.request import Request, RequestRejected, RequestState
 from repro.serve.scheduler import SlotScheduler
-from repro.serve.trace import percentiles, poisson_trace
+from repro.serve.trace import RollingStat, percentiles, poisson_trace
 
 __all__ = [
-    "PackEntry", "PackedModel", "PagePool", "PagedKVCache", "PrefillJob",
-    "PrefillPlanner", "Request", "RequestRejected", "RequestState",
-    "ServeEngine", "SlotKVCache", "SlotScheduler", "choose_block",
-    "pack_lm_head", "pack_model", "percentiles", "poisson_trace",
+    "OutOfPages", "PackEntry", "PackedModel", "PagePool", "PagedKVCache",
+    "PrefillJob", "PrefillPlanner", "PrefixBlock", "Request",
+    "RequestRejected", "RequestState", "RollingStat", "ServeEngine",
+    "SlotKVCache", "SlotScheduler", "choose_block", "pack_lm_head",
+    "pack_model", "percentiles", "poisson_trace",
 ]

@@ -43,7 +43,8 @@ from __future__ import annotations
 import math
 import time
 import warnings
-from typing import List, Optional, Sequence, Tuple
+from collections import deque
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -57,11 +58,11 @@ from repro.models.config import ModelConfig
 from repro.models.model import init_params, lm_head_weight
 from repro.serve.cache import SlotKVCache
 from repro.serve.packed import PackedModel, choose_block, pack_model
-from repro.serve.paging import PagedKVCache
+from repro.serve.paging import OutOfPages, PagedKVCache
 from repro.serve.prefill import PrefillPlanner
-from repro.serve.request import Request, RequestRejected, RequestState
+from repro.serve.request import Request, RequestRejected
 from repro.serve.scheduler import SlotScheduler
-from repro.serve.trace import percentiles
+from repro.serve.trace import RollingStat
 from repro.sparse.format import BitmapWeight, pack_bitmap
 from repro.sparse.pruning import global_l1_prune, per_tensor_prune, \
     sparsity_of
@@ -97,7 +98,8 @@ class ServeEngine:
                  stream_weights: bool = True, top_k: int = 0,
                  paged: bool = False, page_len: int = 16,
                  page_pool_tokens: Optional[int] = None,
-                 prefill_chunk: int = 0):
+                 prefill_chunk: int = 0, prefix_reuse: bool = False,
+                 preempt: bool = False, history: int = 512):
         """``head_sparsity``: ``global_l1_prune`` deliberately keeps
         (tied) embeddings dense, so the LM head is additionally pruned
         per-tensor to this level before packing — that is what gives the
@@ -137,6 +139,32 @@ class ServeEngine:
         it.  Archs with recurrent mixer state (mamba/rwkv/rwkv_cm) or
         the frames frontend fall back to teacher-forcing with a recorded
         reason.
+
+        ``prefix_reuse``: hash ``page_len``-token prompt blocks and map
+        a new request's matching prefix onto already-resident physical
+        pages copy-on-write (``repro.serve.paging`` prefix cache) — the
+        matched region skips prefill entirely, so TTFT on a hit
+        collapses to queue + first-decode.  Requires paging; archs with
+        recurrent mixer state or the frames frontend fall back with a
+        recorded reason (pages don't capture that state, so skipping
+        ingestion would drop it).
+
+        ``preempt``: recompute-on-preempt eviction.  Admission commits
+        only the *live* ingest pages instead of the worst case
+        (occupancy rises at equal pool size); when the free list runs
+        dry mid-flight the engine evicts cached prefixes and then
+        preempts the youngest slot — its pages return to the pool and
+        the request re-queues at the head of the FIFO with prompt +
+        already-generated tokens re-ingested on re-admission.  Sampling
+        keys fold the absolute position, so recomputed requests emit
+        token-identical streams.  Requires paging; the frames frontend
+        falls back (its embeds derive from the global step counter, so
+        a recompute would diverge).
+
+        ``history``: retired requests kept for inspection (a bounded
+        deque); latency aggregates are folded in at retire time
+        (``RollingStat``), so a long-lived engine's memory and
+        ``report()`` cost stay O(history), not O(total traffic).
         """
         self.cfg = cfg
         self.num_slots = num_slots
@@ -197,7 +225,7 @@ class ServeEngine:
         self.head_compression = (self.lm_weight.compression
                                  if self.lm_weight is not None else 1.0)
 
-        self.scheduler = SlotScheduler(num_slots)
+        self.scheduler = SlotScheduler(num_slots, history=history)
         # paged KV cache: pages only help when some block caches per-token
         # KV lines, and the paged pools (like the packed weights) have no
         # sharded layout yet — fall back to contiguous with a reason
@@ -219,8 +247,53 @@ class ServeEngine:
             warnings.warn(f"paged KV cache fell back to contiguous: "
                           f"{self.paging_fallback}", stacklevel=2)
         self.page_len = page_len
+
+        # shared-prefix reuse + preemption both live on the paged cache;
+        # each falls back (recorded reason, same idiom as above) when its
+        # preconditions don't hold rather than failing the engine
+        recurrent = any(b.mixer != "attn" or b.ffn == "rwkv_cm"
+                        for b in cfg.pattern)
+        self.prefix_fallback: Optional[str] = None
+        if prefix_reuse:
+            if not page_len:
+                self.prefix_fallback = (
+                    "paged KV cache disabled (or fell back to "
+                    "contiguous); no pages to share")
+            elif cfg.frontend == "frames":
+                self.prefix_fallback = (
+                    f"{cfg.name}: frames frontend derives embeds from "
+                    f"the step counter; prompt-token hashing is "
+                    f"meaningless")
+            elif recurrent:
+                self.prefix_fallback = (
+                    f"{cfg.name}: recurrent mixer state (mamba/rwkv) is "
+                    f"not captured by KV pages; skipping ingestion "
+                    f"would drop it")
+            if self.prefix_fallback:
+                prefix_reuse = False
+                warnings.warn(f"shared-prefix reuse fell back: "
+                              f"{self.prefix_fallback}", stacklevel=2)
+        self.prefix_reuse = prefix_reuse
+        self.preempt_fallback: Optional[str] = None
+        if preempt:
+            if not page_len:
+                self.preempt_fallback = (
+                    "paged KV cache disabled (or fell back to "
+                    "contiguous); no pages to reclaim")
+            elif cfg.frontend == "frames":
+                self.preempt_fallback = (
+                    f"{cfg.name}: frames embeds fold the global step "
+                    f"counter, so a preempted request's recompute would "
+                    f"diverge from its first run")
+            if self.preempt_fallback:
+                preempt = False
+                warnings.warn(f"recompute-on-preempt fell back: "
+                              f"{self.preempt_fallback}", stacklevel=2)
+        self.preempt = preempt
+
         self.kv = (PagedKVCache(cfg, num_slots, max_len, page_len,
-                                pool_tokens=page_pool_tokens)
+                                pool_tokens=page_pool_tokens,
+                                strict=not preempt)
                    if page_len else SlotKVCache(cfg, num_slots, max_len))
         self.top_k_default = top_k
         step_fn = build_serve_step(cfg, impl=impl, top_k=top_k)
@@ -282,7 +355,26 @@ class ServeEngine:
         self._steps = 0
         self._active_slot_steps = 0     # occupancy accounting
         self._next_rid = 0
-        self.requests: List[Request] = []
+        # per-slot ingest = prompt + tokens generated before a preemption
+        # — the teacher-forcing/prefill source, so a recomputed request
+        # replays its own history instead of resampling it
+        self._ingest: Dict[int, List[int]] = {}
+        self._admit_seq = np.zeros(num_slots, np.int64)  # preempt order
+        self._admit_counter = 0
+        self._recomputed_tokens = 0
+        # bounded retained history + streaming aggregates: report() reads
+        # these instead of rescanning every request ever submitted
+        self.history = history
+        self.requests: deque = deque(maxlen=max(1, history))
+        self._done_count = 0
+        self._gen_tokens = 0
+        self._lat_stat = RollingStat(seed=1)
+        self._ftl_stat = RollingStat(seed=2)
+        self._queue_stat = RollingStat(seed=3)
+        self._prefill_stat = RollingStat(seed=4)
+        self._fdec_stat = RollingStat(seed=5)
+        self._ftl_hit = RollingStat(seed=6)
+        self._ftl_miss = RollingStat(seed=7)
         self._t0: Optional[float] = None
 
     @classmethod
@@ -334,7 +426,9 @@ class ServeEngine:
         if top_k is not None and top_k != self.top_k_default:
             self._use_topk_vec = True
         self._next_rid += 1
-        self.requests.append(req)
+        # the scheduler owns the request until retirement; the engine's
+        # bounded ``requests`` history only receives it when done (the
+        # old append-on-submit list grew with total traffic forever)
         self.scheduler.submit(req)
         return req
 
@@ -342,6 +436,69 @@ class ServeEngine:
 
     def _wall(self) -> float:
         return time.perf_counter() - self._t0
+
+    def _commit_tokens(self, req: Request) -> int:
+        """Pages to commit at admission, in tokens.  Strict mode commits
+        the worst case (prompt + full budget) so allocation can never
+        fail mid-flight; preemptible mode commits only the *live* ingest
+        (prompt + tokens already generated before a preemption) — more
+        requests fit the same pool, and growth past the commitment is
+        covered by recompute-on-preempt."""
+        if self.preempt:
+            return len(req.prompt) + len(req.tokens)
+        return len(req.prompt) + req.max_new_tokens - 1
+
+    def _with_pages(self, fn, requester: int):
+        """Run a page-allocating call, resolving ``OutOfPages`` (raised
+        only in preemptible mode, after the prefix cache has been
+        drained) by preempting the youngest slot until it succeeds."""
+        while True:
+            try:
+                return fn()
+            except OutOfPages:
+                self._reclaim(requester)
+
+    def _reclaim(self, requester: int) -> None:
+        victims = [s for s in self.scheduler.active if s != requester]
+        # unreachable by construction: submit() checks possible(), and a
+        # lone slot's own pages never exceed its capped worst case, so a
+        # dry pool always implicates an evictable cache entry (already
+        # drained) or another slot
+        assert victims, "page pool exhausted with no preemptable slot"
+        victim = max(victims, key=lambda s: int(self._admit_seq[s]))
+        self._preempt_slot(victim)
+
+    def _preempt_slot(self, slot: int) -> None:
+        """Preempt: reclaim the slot's pages and re-queue its request at
+        the head of the FIFO.  Everything computed so far is discarded;
+        on re-admission the prompt + already-generated tokens re-ingest
+        through the normal prefill path (vLLM-style recompute).  Decode
+        sampling keys fold the absolute position, so the recomputed
+        stream is token-identical to the undisturbed one."""
+        req = self.scheduler.active[slot]
+        req.t_preempt.append(self._wall())
+        if self.planner is not None:
+            self.planner.cancel(slot)
+        self.scheduler.requeue(slot)
+        self.kv.retire(slot)
+        self._ingest.pop(slot, None)
+        self._pos[slot] = 0
+        self._temp[slot] = 0.0
+        self._topk[slot] = 0
+
+    def _retire(self, req: Request) -> None:
+        """Fold the finished request into the streaming aggregates and
+        the bounded retained history — report() never rescans."""
+        self._done_count += 1
+        self._gen_tokens += len(req.tokens)
+        self._lat_stat.add(req.latency_s)
+        self._ftl_stat.add(req.first_token_s)
+        self._queue_stat.add(req.queue_s)
+        self._prefill_stat.add(req.prefill_s)
+        self._fdec_stat.add(req.first_decode_s)
+        (self._ftl_hit if req.prefix_hit_tokens > 0
+         else self._ftl_miss).add(req.first_token_s)
+        self.requests.append(req)
 
     def _decode(self, tok: jnp.ndarray, pos: jnp.ndarray):
         packed = self.packed.blocks if self.packed is not None else None
@@ -384,20 +541,42 @@ class ServeEngine:
         """
         tokens, pos, lens, finished = self.planner.next_call()
         if self.page_len:
-            for slot in np.nonzero(lens)[0]:
-                self.kv.ensure_range(int(slot), int(pos[slot]),
-                                     int(pos[slot]) + int(lens[slot]))
+            # oldest slots first: if mapping runs the pool dry in
+            # preemptible mode, the youngest victims haven't mapped yet —
+            # their reclaimed pages go to the older requesters (a
+            # preempted slot's lane still scatters, into the trash page)
+            order = sorted(np.nonzero(lens)[0],
+                           key=lambda s: int(self._admit_seq[int(s)]))
+            for slot in order:
+                if int(slot) not in self.scheduler.active:
+                    continue
+                self._with_pages(
+                    lambda s=int(slot): self.kv.ensure_range(
+                        s, int(pos[s]), int(pos[s]) + int(lens[s])),
+                    int(slot))
         hidden, cache = self._prefill(tokens, pos, lens)
         self.kv.cache = cache
         jax.block_until_ready(hidden)
         wall = self._wall()
+        if self.prefix_reuse:
+            # publish each advanced slot's fully-written blocks *now* —
+            # before any later chunk can ring-wrap over them
+            for slot in np.nonzero(lens)[0]:
+                if int(slot) in self.scheduler.active:
+                    self.kv.register_prefix(
+                        int(slot), self._ingest[int(slot)],
+                        int(pos[slot]) + int(lens[slot]))
         for slot in finished:
+            if slot not in self.scheduler.active:
+                continue               # preempted mid-call
             req = self.scheduler.active[slot]
-            self._pos[slot] = len(req.prompt) - 1
-            self._tok[slot] = req.prompt[-1]
-            req.t_prefill_done = wall
+            ing = self._ingest[slot]
+            self._pos[slot] = len(ing) - 1
+            self._tok[slot] = ing[-1]
+            if req.t_prefill_done is None:
+                req.t_prefill_done = wall
         for slot in np.nonzero(lens)[0]:
-            if int(slot) not in finished:
+            if self.planner.in_prefill(int(slot)):
                 # park the passenger's decode write on the next unwritten
                 # prompt position: the next chunk rewrites that line
                 # before anything reads it
@@ -457,15 +636,34 @@ class ServeEngine:
             # until retirements free enough pages — never a crash.  The
             # gate *reserves* (check-and-commit), so multiple admissions
             # in one pass can't over-commit the pool.
-            fits = lambda r: self.kv.reserve(
-                len(r.prompt) + r.max_new_tokens - 1)
+            fits = lambda r: self.kv.reserve(self._commit_tokens(r))
         for slot, req in self.scheduler.admit(now, fits=fits):
+            # ingest = prompt plus tokens generated before a preemption:
+            # a recomputed request teacher-forces/prefills its own
+            # history instead of resampling it
+            ing = list(req.prompt) + list(req.tokens)
+            self._admit_seq[slot] = self._admit_counter
+            self._admit_counter += 1
+            shared = 0
             if self.page_len:
-                self.kv.admit(slot, len(req.prompt) + req.max_new_tokens - 1)
+                blocks = None
+                if self.prefix_reuse:
+                    _, blocks = self.kv.match_prefix(ing)
+                shared = self.kv.admit(slot, self._commit_tokens(req),
+                                       prefix=blocks)
             else:
                 self.kv.reset_slot(slot)
-            self._pos[slot] = 0
-            self._tok[slot] = req.prompt[0]
+            self._ingest[slot] = ing
+            if not req.t_preempt:
+                req.prefix_hit_tokens = shared
+            else:
+                # recompute cost actually paid on this re-admission
+                # (adopted blocks — often this request's own earlier
+                # registrations — shrink it)
+                req.recomputed_tokens += max(0, len(ing) - 1 - shared)
+                self._recomputed_tokens += max(0, len(ing) - 1 - shared)
+            self._pos[slot] = shared
+            self._tok[slot] = ing[shared]
             self._temp[slot] = req.temperature
             self._topk[slot] = (req.top_k if req.top_k is not None
                                 else self.top_k_default)
@@ -475,11 +673,14 @@ class ServeEngine:
             req.admit_step = self._steps
             if req.t_due is None:
                 req.t_due = self._wall()
-            req.t_admit = self._wall()
+            if req.t_admit is None:   # re-admissions keep the first mark
+                req.t_admit = self._wall()
             if self.planner is not None:
-                self.planner.start(slot, req.prompt)
-            if len(req.prompt) == 1:
-                req.t_prefill_done = req.t_admit   # nothing to prefill
+                self.planner.start(slot, ing, start=shared)
+            if shared >= len(ing) - 1 and req.t_prefill_done is None:
+                # nothing left to ingest — single-token prompt, or a full
+                # prefix hit: TTFT collapses to queue + first-decode
+                req.t_prefill_done = req.t_admit
 
         # at most one prefill call per engine step: a stream of long
         # prompts interleaves chunk calls with decode steps instead of
@@ -496,9 +697,18 @@ class ServeEngine:
             if self.page_len:
                 # map each decoding slot's current write page; mid-prefill
                 # passengers stay unmapped and scribble into the trash
-                # page (or an unwritten line their next chunk rewrites)
-                for slot in decoding:
-                    self.kv.ensure(slot, int(self._pos[slot]))
+                # page (or an unwritten line their next chunk rewrites).
+                # Oldest first: in preemptible mode a dry pool preempts
+                # the youngest slots, which haven't mapped yet
+                for slot in sorted(decoding,
+                                   key=lambda s: int(self._admit_seq[s])):
+                    if slot not in self.scheduler.active:
+                        continue
+                    self._with_pages(
+                        lambda s=slot: self.kv.ensure(
+                            s, int(self._pos[s])), slot)
+                decoding = [s for s in self.scheduler.active
+                            if not in_prefill(s)]
             nxt, _, cache = self._decode(jnp.asarray(self._tok[:, None]),
                                          jnp.asarray(self._pos))
             self.kv.cache = cache
@@ -509,17 +719,26 @@ class ServeEngine:
             for slot, req in list(self.scheduler.active.items()):
                 if in_prefill(slot):
                     continue
+                ing = self._ingest[slot]
                 p = int(self._pos[slot])
                 self._pos[slot] = p + 1
-                if p + 1 < len(req.prompt):
-                    # still consuming the prompt: teacher-force the next
-                    # token (legacy prompt walk, prefill_chunk == 0)
-                    self._tok[slot] = req.prompt[p + 1]
-                    if p + 1 == len(req.prompt) - 1:
-                        req.t_prefill_done = wall   # prompt cache resident
+                if (self.prefix_reuse and (p + 1) % self.page_len == 0):
+                    # a block boundary just filled: publish it (prompt
+                    # *and* generated blocks — identical greedy requests
+                    # reuse each other's generations too)
+                    self.kv.register_prefix(slot, ing, p + 1)
+                if p + 1 < len(ing):
+                    # still consuming prompt/recompute history: teacher-
+                    # force the next token (legacy walk, or a preempted
+                    # request replaying its generated prefix)
+                    self._tok[slot] = ing[p + 1]
+                    if (p + 1 == len(ing) - 1
+                            and req.t_prefill_done is None):
+                        req.t_prefill_done = wall  # prompt cache resident
                     continue
                 t = int(nxt_host[slot])
                 req.tokens.append(t)
+                ing.append(t)
                 if req.t_first is None:
                     req.t_first = wall
                 self._tok[slot] = t
@@ -530,9 +749,11 @@ class ServeEngine:
                     self.scheduler.release(slot)
                     if self.page_len:
                         self.kv.retire(slot)   # pages back to the free list
+                    self._ingest.pop(slot, None)
                     self._pos[slot] = 0
                     self._temp[slot] = 0.0     # freed slots decode greedy
                     self._topk[slot] = 0
+                    self._retire(req)
             self._decode_steps += 1
         self._steps += 1
 
@@ -614,26 +835,44 @@ class ServeEngine:
                         "in_flight": 0, "lane_utilization": None})
         return rep
 
+    def prefix_reuse_report(self) -> dict:
+        """Shared-prefix + preemption stats: cache hit/evict/fork
+        counters (from the paged cache), the hit-vs-miss TTFT split, and
+        the preemption/recompute accounting."""
+        rep = {
+            "enabled": self.prefix_reuse,
+            "fallback": self.prefix_fallback,
+            "ttft_hit_s": self._ftl_hit.percentiles(),
+            "ttft_miss_s": self._ftl_miss.percentiles(),
+            "hit_requests": self._ftl_hit.count,
+            "miss_requests": self._ftl_miss.count,
+            "preempt": {
+                "enabled": self.preempt,
+                "fallback": self.preempt_fallback,
+                "count": self.scheduler.preemptions,
+                "recomputed_tokens": self._recomputed_tokens,
+            },
+        }
+        if self.page_len:
+            rep.update(self.kv.prefix_report())
+        return rep
+
     def report(self) -> dict:
-        done = [r for r in self.requests if r.state == RequestState.DONE]
         dt = self._wall() if self._t0 is not None else 0.0
-        gen = sum(len(r.tokens) for r in done)
-        lat = percentiles([r.latency_s for r in done
-                           if r.latency_s is not None])
-        ftl = percentiles([r.first_token_s for r in done
-                           if r.first_token_s is not None])
+        gen = self._gen_tokens
+        # streaming aggregates folded in at retire time: identical to
+        # the old full-rescan on short traces (the RollingStat reservoir
+        # is exact up to its cap), O(history) instead of O(traffic)
+        lat = self._lat_stat.percentiles()
+        ftl = self._ftl_stat.percentiles()
         # TTFT decomposition: queueing (no slot), prompt ingestion
         # (chunked prefill calls or the legacy teacher-forced walk), and
         # the first real decode step — first_token_s is their sum, no
         # longer conflating prompt-walk time with queueing
         ttft = {
-            "queue_s": percentiles([r.queue_s for r in done
-                                    if r.queue_s is not None]),
-            "prefill_s": percentiles([r.prefill_s for r in done
-                                      if r.prefill_s is not None]),
-            "first_decode_s": percentiles(
-                [r.first_decode_s for r in done
-                 if r.first_decode_s is not None]),
+            "queue_s": self._queue_stat.percentiles(),
+            "prefill_s": self._prefill_stat.percentiles(),
+            "first_decode_s": self._fdec_stat.percentiles(),
         }
         occ = (self._active_slot_steps / (self._steps * self.num_slots)
                if self._steps else 0.0)
@@ -648,7 +887,8 @@ class ServeEngine:
                       "contiguous_kv_bytes": reserved,
                       "reserved_reduction": 1.0}
         return {
-            "requests": len(done),
+            "requests": self._done_count,
+            "retained_requests": len(self.requests),
             "generated_tokens": gen,
             "steps": self._steps,
             "wall_s": dt,
@@ -657,6 +897,7 @@ class ServeEngine:
             "first_token_s": ftl,
             "ttft": ttft,
             "prefill": self.prefill_report(),
+            "prefix_reuse": self.prefix_reuse_report(),
             "slot_occupancy": occ,
             "weight_sparsity": self.weight_sparsity,
             "head_compression": self.head_compression,

@@ -1,5 +1,6 @@
-"""Paged KV-cache subsystem: page pools, a free-list allocator, and
-per-slot page tables for the serving engine.
+"""Paged KV-cache subsystem: page pools, a refcounted free-list
+allocator, per-slot page tables, and a shared-prefix page cache for the
+serving engine.
 
 The contiguous ``SlotKVCache`` reserves worst-case ``num_slots × max_len``
 KV lines per attention leaf for the engine's lifetime, so short requests
@@ -14,10 +15,10 @@ fetches — into fixed-size shared units gathered through an index:
   ceil(capacity / page_len)`` int32 entries per pool (capacity is
   window-bounded for sliding-window blocks), mapping logical token slots
   onto physical pages;
-* a host-side **free-list allocator** hands out pages lazily as a slot's
-  position advances and takes them back when the request retires — the
-  pool (what is actually reserved) scales with *live tokens*, not
-  ``num_slots × max_len``.
+* a host-side **refcounted free-list allocator** hands out pages lazily
+  as a slot's position advances and takes them back when the last
+  reference drops — the pool (what is actually reserved) scales with
+  *live tokens*, not ``num_slots × max_len``.
 
 Physical page 0 of every pool is a reserved **trash page**: unmapped
 table entries point at it, so idle batch slots — which still execute the
@@ -27,29 +28,59 @@ logical pages read garbage that the attention validity mask always
 excludes.  Pages therefore never need zeroing between requests; only the
 O(1)-per-slot recurrent (SSM/RWKV) state is zeroed on admission.
 
-Admission is commitment-based so allocation can never fail mid-flight:
-a request commits its worst-case page count per pool
+**Shared-prefix reuse (SIDR at the cache level).**  Requests that share
+a system prompt share physical pages: the prefix cache hashes
+``page_len``-token prompt blocks into a chain
+(``sha1(parent_digest ‖ block_tokens)``) and keeps, per chain node, the
+one physical page per pool holding that block's K/V lines.  A new
+request whose prompt matches a cached chain *adopts* those pages
+copy-on-write — every matched page's refcount is bumped and mapped into
+the slot's tables, and prefill starts after the matched region (a full
+hit skips prefill entirely).  Writes into a shared page (a sliding-
+window ring wrapping back over the prefix) **fork** it first: a fresh
+page is allocated, the page contents are copied device-side, and the
+writer's table entry is swapped, so every other holder (other slots,
+the cache itself) keeps the original bytes.  Chains are capped at the
+smallest pool capacity (``shareable_tokens``) so no ring ever wraps
+*inside* a shared prefix — within that region, logical block ``i``
+lives in table entry ``i`` of every pool and its page holds exactly
+that block's tokens.
+
+Admission is commitment-based so allocation can never fail mid-flight
+in strict mode: a request commits its worst-case page count per pool
 (``ceil((len(prompt) + max_new_tokens - 1) / page_len)``, ring-capped at
 ``page_slots``) when admitted, and the engine only admits while every
 pool has ``committed + candidate <= pool_pages``.  Since a slot never
-maps more pages than it committed, the free list is provably non-empty
-whenever ``ensure`` needs a page (tests/test_paging.py property-checks
-this along with no-double-free, no cross-slot aliasing and free-list
-conservation).  Out-of-pages is thus an *admission* condition — the
-request waits in the queue until retirements free pages — never a crash.
+allocates more pages than it committed (a COW fork of an adopted entry
+replaces the adoption, so per-entry allocations stay <= 1), the free
+list is provably non-empty whenever ``ensure`` needs a page once cache-
+only pages are evicted.  With ``strict=False`` (the engine's
+recompute-on-preempt mode) commitments shrink to the *live* ingest need
+and ``ensure`` may instead raise ``OutOfPages`` — the engine resolves it
+by evicting cached prefixes and, if still dry, preempting the youngest
+slot.  Out-of-pages is thus an *admission or preemption* condition —
+never a crash.
 
-Invariants (property-tested in tests/test_paging.py):
+Invariants (property-tested in tests/test_paging.py and
+tests/test_prefix_reuse.py):
 
 * **Pages are never zeroed** — the validity mask in
   ``layers.decode_attention`` (``slot_pos <= pos``, window bound)
   excludes stale gathers, so a page handed from one request to another
   needs no scrub; only O(1)-per-slot recurrent state is zeroed.
-* **A live page has exactly one writer** — its owning slot.  Idle or
-  masked-off lanes resolve to physical page 0 (the trash page), which
-  is reserved and never allocated.
-* **The free list is conserved and non-empty on demand** — a page is
-  free xor mapped by exactly one slot; commitments bound mapped pages,
-  so ``ensure``/``ensure_range`` cannot run dry mid-flight.
+* **A live page has exactly one writer** — COW forks guarantee it: a
+  write lands in a page only while its refcount is exactly 1 (idle or
+  masked-off lanes resolve to the reserved trash page 0).
+* **Free xor referenced** — every data page id is on the free list xor
+  has refcount >= 1, and a page's refcount equals the number of slot
+  table entries mapping it plus one if a prefix-cache block holds it
+  (no double free, conservation: ``len(free) + referenced ==
+  pool_pages`` after every transition).
+* **Capped admission on both sides** — ``possible()``/``fits()`` and
+  the bound commitments all go through ``pages_for``'s per-pool
+  ``min(need_pages, page_slots)`` cap, so a sliding-window request
+  longer than its window is neither spuriously rejected nor
+  over-committed (the ring never touches more than its table width).
 * **Addressing is single-sourced** — ``model.paged_addressing`` defines
   (capacity, ring) once for the host allocator and the device cache
   write, so they cannot drift.
@@ -57,7 +88,9 @@ Invariants (property-tested in tests/test_paging.py):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+import hashlib
+from collections import OrderedDict
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -66,6 +99,16 @@ import numpy as np
 from repro.models.config import ModelConfig
 from repro.models.model import (attn_capacity, init_cache,
                                 paged_addressing, paged_layout)
+
+
+class OutOfPages(RuntimeError):
+    """Raised (non-strict mode only) when an allocation finds the free
+    list dry after the prefix cache has been drained — the engine's cue
+    to preempt the youngest slot and recompute it later."""
+
+    def __init__(self, bname: str):
+        super().__init__(f"{bname}: page pool exhausted")
+        self.bname = bname
 
 
 @dataclasses.dataclass
@@ -80,10 +123,32 @@ class PagePool:
     ring: bool             # sliding-window ring addressing (mod capacity)
     line_bytes: int        # K+V bytes of one token line across periods
     free: List[int] = dataclasses.field(default_factory=list)
+    ref: Dict[int, int] = dataclasses.field(default_factory=dict)
     table: Optional[np.ndarray] = None   # (num_slots, page_slots) int32
     committed: int = 0     # admission-reserved worst-case pages
-    in_use: int = 0
+    in_use: int = 0        # pages off the free list (any refcount)
     peak: int = 0
+
+
+@dataclasses.dataclass
+class PrefixBlock:
+    """One cached ``page_len``-token prefix block: a node in the hash
+    chain holding one physical page per pool.  The cache itself counts
+    as one reference on each page, so registered pages survive their
+    writer's retirement and later requests can adopt them."""
+
+    key: bytes                     # sha1(parent_digest || block tokens)
+    parent: Optional[bytes]        # previous block in the chain
+    index: int                     # block index == table entry == page i
+    length: int                    # tokens covered: (index + 1) * page_len
+    pages: Dict[str, int]          # bname -> physical page id
+    children: int = 0              # cached blocks extending this one
+
+
+def _chain_key(parent: Optional[bytes], tokens: Sequence[int]) -> bytes:
+    h = hashlib.sha1(parent or b"")
+    h.update(np.asarray(tokens, np.int64).tobytes())
+    return h.digest()
 
 
 class PagedKVCache:
@@ -91,18 +156,26 @@ class PagedKVCache:
 
     Mirrors ``SlotKVCache``'s surface (``cache``, ``resets``, ``warmup``)
     and adds the allocator: ``possible``/``fits`` for admission control,
-    ``admit``/``ensure``/``retire`` for the page lifecycle, ``tables()``
-    for the per-step jit argument, and ``report()`` for the paging
-    section of the engine report.
+    ``admit``/``ensure``/``retire`` for the page lifecycle, the prefix
+    cache (``match_prefix``/``register_prefix``/``evict_one``),
+    ``tables()`` for the per-step jit argument, and ``report()`` for the
+    paging section of the engine report.
 
     ``pool_tokens`` bounds each pool to ``ceil(pool_tokens / page_len)``
     data pages (capped at the worst case ``num_slots * page_slots``);
     default is the worst case, which still allocates lazily but can
     always admit whatever the contiguous cache could.
+
+    ``strict=True`` (default) keeps the commitment invariant: the free
+    list can never run dry mid-flight, so ``ensure`` never raises.
+    ``strict=False`` relaxes commitments to whatever the engine chooses
+    to reserve; a dry free list then raises ``OutOfPages`` after the
+    prefix cache is drained, and the engine preempts.
     """
 
     def __init__(self, cfg: ModelConfig, num_slots: int, max_len: int,
-                 page_len: int, pool_tokens: Optional[int] = None):
+                 page_len: int, pool_tokens: Optional[int] = None,
+                 strict: bool = True):
         assert page_len > 0
         layout = paged_layout(cfg, max_len, page_len)
         if not layout:
@@ -111,6 +184,7 @@ class PagedKVCache:
         self.num_slots = num_slots
         self.max_len = max_len
         self.page_len = page_len
+        self.strict = strict
         self.resets = 0
 
         kv_line = (2 * cfg.num_periods * cfg.num_kv_heads
@@ -136,6 +210,19 @@ class PagedKVCache:
             pool.table = np.zeros((num_slots, slots), np.int32)
             self.pools[bname] = pool
 
+        # shared prefixes are chain-capped at the smallest pool capacity
+        # (padded), so no ring ever wraps *inside* a shared region and
+        # logical block i == table entry i == page index i in every pool
+        self.shareable_tokens = min(
+            paged_addressing(p.page_slots, page_len, p.window)[0]
+            for p in self.pools.values())
+        self.prefix: "OrderedDict[bytes, PrefixBlock]" = OrderedDict()
+        self.prefix_hits = 0
+        self.prefix_misses = 0
+        self.hit_tokens = 0
+        self.evictions = 0
+        self.forks = 0
+
         pool_pages = {b: p.pool_pages + 1 for b, p in self.pools.items()}
         self.cache = init_cache(cfg, num_slots, max_len, page_len=page_len,
                                 pool_pages=pool_pages)
@@ -145,6 +232,10 @@ class PagedKVCache:
         # per request (admit / page boundary / retire), so the hot decode
         # loop reuses one upload until a mutation invalidates it
         self._dev_tables: Optional[Dict[str, jnp.ndarray]] = None
+        # per-pool jitted COW page copy (src -> dst, donated): forks are
+        # rare (a ring wrapping over a shared prefix), so each pool's
+        # copy executable compiles once on first fork
+        self._copy_fns: Dict[str, Callable] = {}
         # jitted donated reset for the slotted (non-paged) leaves only:
         # recurrent state is zeroed per admission, page pools never are
         # (the k/v leaves of paged blocks pass through untouched; any
@@ -163,7 +254,12 @@ class PagedKVCache:
 
     def pages_for(self, need_tokens: int) -> Dict[str, int]:
         """Worst-case pages per pool for a request touching positions
-        ``0 .. need_tokens-1`` (ring pools cap at their table width)."""
+        ``0 .. need_tokens-1``.  Ring pools cap at their table width —
+        positions past the window wrap onto already-counted entries, so
+        the *unwrapped* token count never translates into more than
+        ``page_slots`` pages.  Every admission-side check (``possible``,
+        ``fits``, ``reserve``) and the bound commitment go through this
+        one cap, so they cannot disagree."""
         n = -(-max(need_tokens, 1) // self.page_len)
         return {b: min(n, p.page_slots) for b, p in self.pools.items()}
 
@@ -181,10 +277,13 @@ class PagedKVCache:
     def reserve(self, need_tokens: int) -> bool:
         """Check-and-commit in one step — the scheduler's admission gate.
 
-        Commits the worst-case pages immediately on success, so several
-        admissions in one scheduler pass can't all pass a stale check
-        and over-commit the pool.  ``admit`` then binds the reservation
-        to its slot without counting it again.
+        Commits the pages immediately on success, so several admissions
+        in one scheduler pass can't all pass a stale check and
+        over-commit the pool.  ``admit`` then binds the reservation to
+        its slot without counting it again.  In strict mode the engine
+        passes the worst-case need; in preemptible mode it passes the
+        live ingest length, which is what lets occupancy rise at equal
+        pool size.
         """
         if not self.fits(need_tokens):
             return False
@@ -192,32 +291,104 @@ class PagedKVCache:
             self.pools[b].committed += n
         return True
 
-    def admit(self, slot: int, need_tokens: int) -> None:
+    def admit(self, slot: int, need_tokens: int,
+              prefix: Optional[List[PrefixBlock]] = None) -> int:
         """Bind a prior ``reserve`` to its slot, zero the slot's
-        recurrent state, and map the first page (position 0 is written
-        on the admit step)."""
+        recurrent state, and adopt any matched prefix blocks copy-on-
+        write.  Returns the number of adopted (prefill-skippable)
+        tokens.  Nothing is *allocated* here — adoption only bumps
+        refcounts — so admission itself can never hit ``OutOfPages``;
+        the first allocation happens in ``ensure``/``ensure_range`` on
+        the slot's first write."""
         assert 0 <= slot < self.num_slots
         assert not self._commit[slot], f"slot {slot} not retired"
         self._commit[slot] = self.pages_for(need_tokens)
         self.cache = self._reset(self.cache, jnp.int32(slot))
         self.resets += 1
-        self.ensure(slot, 0)
+        # prefix=None: reuse disabled (no hit/miss accounting);
+        # prefix=[]: reuse enabled but nothing matched (a counted miss)
+        return (self.adopt_prefix(slot, prefix)
+                if prefix is not None else 0)
+
+    # ------------------------------------------------------- allocator ----
+
+    def _alloc(self, bname: str, pool: PagePool) -> int:
+        """Pop a fresh page off the free list (refcount 1), draining
+        cache-only prefix pages first when the list is dry."""
+        while not pool.free and self.evict_one(prefer=bname):
+            pass
+        if not pool.free:
+            if self.strict:
+                raise AssertionError(
+                    f"{bname}: free list empty with {pool.committed} "
+                    f"committed of {pool.pool_pages} and no evictable "
+                    f"prefix — commitment invariant broken")
+            raise OutOfPages(bname)
+        pg = pool.free.pop()
+        pool.ref[pg] = 1
+        pool.in_use += 1
+        pool.peak = max(pool.peak, pool.in_use)
+        return pg
+
+    def _deref(self, bname: str, pool: PagePool, pg: int) -> None:
+        assert pg in pool.ref and pool.ref[pg] >= 1, \
+            f"{bname}: double free of page {pg}"
+        pool.ref[pg] -= 1
+        if pool.ref[pg] == 0:
+            del pool.ref[pg]
+            pool.free.append(pg)
+            pool.in_use -= 1
+
+    def _fork(self, bname: str, pool: PagePool, slot: int,
+              pi: int) -> None:
+        """Copy-on-write: give ``slot`` a private copy of its shared
+        table entry before it writes there.  Every other holder (other
+        slots, the prefix cache) keeps the original page bytes."""
+        src = int(pool.table[slot, pi])
+        dst = self._alloc(bname, pool)
+        if bname not in self._copy_fns:
+            def _copy(cache, s, d, _b=bname):
+                leaf = dict(cache[_b])
+                for kk in ("k", "v"):
+                    leaf[kk] = leaf[kk].at[:, d].set(leaf[kk][:, s])
+                return {**cache, _b: leaf}
+            self._copy_fns[bname] = jax.jit(_copy, donate_argnums=(0,))
+        self.cache = self._copy_fns[bname](self.cache, jnp.int32(src),
+                                           jnp.int32(dst))
+        pool.table[slot, pi] = dst
+        self._deref(bname, pool, src)
+        self.forks += 1
+        self._dev_tables = None
 
     def _map_page(self, bname: str, pool: PagePool, slot: int,
                   pi: int) -> None:
-        """Map one logical page-table entry, allocating off the free list
-        (no-op when already mapped)."""
-        if pool.table[slot, pi] == 0:
-            assert pool.free, (
-                f"{bname}: free list empty with {pool.committed} committed "
-                f"of {pool.pool_pages} — commitment invariant broken")
-            pool.table[slot, pi] = pool.free.pop()
-            pool.in_use += 1
-            pool.peak = max(pool.peak, pool.in_use)
+        """Make table entry ``pi`` privately writable by ``slot``:
+        allocate when unmapped, fork when shared, no-op when owned.
+
+        A fork is only taken while a free page exists; with the list dry
+        an eviction is tried first — evicting the cache's hold on this
+        very page may drop its refcount to 1, resolving the share
+        without any copy or allocation at all."""
+        pg = int(pool.table[slot, pi])
+        if pg == 0:
+            pool.table[slot, pi] = self._alloc(bname, pool)
             self._dev_tables = None
+            return
+        while pool.ref[pg] > 1:
+            if not pool.free:
+                if self.evict_one(prefer=bname):
+                    continue
+                if self.strict:
+                    raise AssertionError(
+                        f"{bname}: shared page {pg} needs a fork but the "
+                        f"pool is dry — commitment invariant broken")
+                raise OutOfPages(bname)
+            self._fork(bname, pool, slot, pi)
+            return
 
     def ensure(self, slot: int, pos: int) -> None:
-        """Map the page holding ``pos``'s write slot, allocating lazily.
+        """Make the page holding ``pos``'s write slot privately
+        writable, allocating (or COW-forking a shared page) lazily.
 
         Shares the device-side addressing with ``_decode_attn`` through
         ``models.model.paged_addressing``: ring pools write at
@@ -233,38 +404,169 @@ class PagedKVCache:
         """Bulk-map every page a chunk touching positions
         ``start .. end-1`` will write — chunked prefill's one-admission
         analogue of per-step ``ensure``: all of the chunk's pages are
-        mapped before the prefill call, so the device-side scatter never
-        meets an unmapped live position.
+        mapped (shared ones forked) before the prefill call, so the
+        device-side scatter never meets an unmapped or shared live
+        position.
 
-        Same addressing as ``ensure``; ring pools that wrap within the
-        range simply map their whole table (a ring never needs more than
-        ``page_slots`` pages).
+        Same addressing as ``ensure``; pages map in first-touch position
+        order (a per-step ensure walk over the same range produces the
+        identical tables — property-tested), and a ring that wraps
+        within the range maps its whole table in that order (a ring
+        never needs more than ``page_slots`` pages).
         """
         if end <= start:
             return
         for b, pool in self.pools.items():
             cap, ring = paged_addressing(pool.page_slots, self.page_len,
                                          pool.window)
-            if ring and end - start >= cap:
-                pis = range(pool.page_slots)
-            else:
-                pis = {(p % cap if ring else min(max(p, 0), cap - 1))
-                       // self.page_len for p in range(start, end)}
-            for pi in sorted(pis):
+            span = range(start, min(end, start + cap) if ring else end)
+            pis, seen = [], set()
+            for p in span:
+                pi = (p % cap if ring else min(max(p, 0), cap - 1)) \
+                    // self.page_len
+                if pi not in seen:
+                    seen.add(pi)
+                    pis.append(pi)
+            for pi in pis:
                 self._map_page(b, pool, slot, pi)
 
     def retire(self, slot: int) -> None:
-        """Return the slot's pages to the free list and uncommit."""
+        """Drop the slot's references and uncommit.  Pages whose last
+        reference this was return to the free list; pages the prefix
+        cache (or another slot) still holds stay resident — that is the
+        whole point: the next request with the same prompt adopts them."""
         self._dev_tables = None
         for b, pool in self.pools.items():
             row = pool.table[slot]
-            mapped = [int(p) for p in row[row != 0]]
-            assert not set(mapped) & set(pool.free), "double free"
-            pool.free.extend(mapped)
-            pool.in_use -= len(mapped)
+            for pg in [int(p) for p in row[row != 0]]:
+                self._deref(b, pool, pg)
             row[:] = 0
             pool.committed -= self._commit[slot].get(b, 0)
         self._commit[slot] = {}
+
+    # ---------------------------------------------------- prefix cache ----
+
+    def _chain(self, tokens: Sequence[int], upto: int) -> List[bytes]:
+        """Chain keys for the fully-covered shareable blocks of
+        ``tokens[:upto]``."""
+        limit = min(upto, self.shareable_tokens)
+        keys, parent = [], None
+        for i in range(limit // self.page_len):
+            parent = _chain_key(
+                parent, tokens[i * self.page_len:(i + 1) * self.page_len])
+            keys.append(parent)
+        return keys
+
+    def match_prefix(self, tokens: Sequence[int]
+                     ) -> Tuple[int, List[PrefixBlock]]:
+        """Longest cached chain matching this prompt's leading blocks.
+
+        Capped at ``len(tokens) - 1`` so the final prompt token always
+        goes through the first decode step (which samples the first
+        generated token), and at ``shareable_tokens``.  Matched entries
+        are LRU-touched.  Returns ``(matched_tokens, blocks)``.
+        """
+        blocks: List[PrefixBlock] = []
+        for key in self._chain(tokens, len(tokens) - 1):
+            entry = self.prefix.get(key)
+            if entry is None:
+                break
+            self.prefix.move_to_end(key)
+            blocks.append(entry)
+        return len(blocks) * self.page_len, blocks
+
+    def adopt_prefix(self, slot: int,
+                     blocks: Sequence[PrefixBlock]) -> int:
+        """Map matched prefix blocks into the slot's tables copy-on-
+        write (refcount bumped per page; nothing is allocated).  The
+        slot's tables must be freshly retired."""
+        for e in blocks:
+            for b, pg in e.pages.items():
+                pool = self.pools[b]
+                assert pool.table[slot, e.index] == 0, \
+                    f"{b}: adopting into a mapped entry"
+                pool.table[slot, e.index] = pg
+                pool.ref[pg] += 1
+        if blocks:
+            self._dev_tables = None
+            self.prefix_hits += 1
+            self.hit_tokens += len(blocks) * self.page_len
+        else:
+            self.prefix_misses += 1
+        return len(blocks) * self.page_len
+
+    def register_prefix(self, slot: int, tokens: Sequence[int],
+                        upto: int) -> None:
+        """Publish the slot's fully-written leading blocks into the
+        prefix cache (cache takes one reference per page).
+
+        ``upto`` is the number of positions written so far — the engine
+        calls this as prefill advances (before any later chunk can ring-
+        wrap over a block) and on each legacy-walk block boundary.
+        Blocks already cached are only LRU-touched; the chain stops at
+        the first unregistrable entry so children always have cached
+        parents.
+
+        Registration past ``shareable_tokens`` is refused outright: once
+        any position >= the smallest pool capacity has been written,
+        that pool's ring has wrapped and the low table entries no longer
+        hold their original blocks' lines (already-registered blocks are
+        unaffected — the wrap's ``ensure`` forked them, the cache keeps
+        the original page).  Calling this incrementally — after every
+        prefill chunk / on every legacy-walk block boundary — is what
+        keeps registration ahead of the wrap.
+        """
+        if upto > self.shareable_tokens:
+            return
+        parent: Optional[bytes] = None
+        for i, key in enumerate(self._chain(tokens, upto)):
+            entry = self.prefix.get(key)
+            if entry is not None:
+                self.prefix.move_to_end(key)
+                parent = key
+                continue
+            pages = {}
+            for b, pool in self.pools.items():
+                pg = int(pool.table[slot, i])
+                if pg == 0:          # entry not written by this slot
+                    return
+                pages[b] = pg
+            for b, pg in pages.items():
+                self.pools[b].ref[pg] += 1
+            self.prefix[key] = PrefixBlock(
+                key=key, parent=parent, index=i,
+                length=(i + 1) * self.page_len, pages=pages)
+            if parent is not None:
+                self.prefix[parent].children += 1
+            parent = key
+
+    def evict_one(self, prefer: Optional[str] = None) -> bool:
+        """Evict one leaf prefix block (LRU order), dropping the cache's
+        page references.  ``prefer`` picks, among leaves, the oldest one
+        whose page in that pool is cache-only (so eviction actually
+        frees a page there); falls back to the oldest leaf.  Returns
+        False when the cache is empty."""
+        chosen = None
+        for key, e in self.prefix.items():
+            if e.children:
+                continue
+            if prefer is not None and self.pools[prefer].ref.get(
+                    e.pages[prefer], 0) == 1:
+                chosen = key
+                break
+            if chosen is None:
+                chosen = key
+                if prefer is None:
+                    break
+        if chosen is None:
+            return False
+        e = self.prefix.pop(chosen)
+        if e.parent is not None and e.parent in self.prefix:
+            self.prefix[e.parent].children -= 1
+        for b, pg in e.pages.items():
+            self._deref(b, self.pools[b], pg)
+        self.evictions += 1
+        return True
 
     # ------------------------------------------------------------ step ----
 
@@ -291,6 +593,21 @@ class PagedKVCache:
         """What the contiguous layout would reserve for the same engine."""
         return sum(self.num_slots * p.capacity * p.line_bytes
                    for p in self.pools.values())
+
+    def prefix_report(self) -> Dict:
+        """Shared-prefix cache stats for the engine report."""
+        lookups = self.prefix_hits + self.prefix_misses
+        return {
+            "cached_blocks": len(self.prefix),
+            "cached_tokens": len(self.prefix) * self.page_len,
+            "shareable_tokens": self.shareable_tokens,
+            "hits": self.prefix_hits,
+            "misses": self.prefix_misses,
+            "hit_rate": (self.prefix_hits / lookups if lookups else None),
+            "hit_tokens": self.hit_tokens,
+            "evictions": self.evictions,
+            "forks": self.forks,
+        }
 
     def report(self, positions: Optional[Sequence[int]] = None) -> Dict:
         """Paging stats: pages in use / peak / total, reserved vs

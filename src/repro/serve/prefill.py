@@ -87,15 +87,27 @@ class PrefillPlanner:
 
     # ------------------------------------------------------------ plan ----
 
-    def start(self, slot: int, prompt: Sequence[int]) -> bool:
+    def start(self, slot: int, prompt: Sequence[int],
+              start: int = 0) -> bool:
         """Register a freshly admitted slot; False = nothing to prefill
-        (the prompt is a single token — decode consumes it directly)."""
+        (the prompt is a single token — decode consumes it directly).
+
+        ``start`` skips positions already resident in the slot's cache —
+        the shared-prefix hit path: adopted pages cover ``0 .. start-1``,
+        so prefill begins at ``start`` (a full hit, ``start >= end``,
+        skips prefill entirely and TTFT collapses to queue +
+        first-decode)."""
         assert slot not in self._jobs, f"slot {slot} already prefilling"
         end = len(prompt) - 1
-        if end <= 0:
+        if end - start <= 0:
             return False
-        self._jobs[slot] = PrefillJob(list(prompt), 0, end)
+        self._jobs[slot] = PrefillJob(list(prompt), start, end)
         return True
+
+    def cancel(self, slot: int) -> None:
+        """Drop a slot's remaining plan (preemption): the engine
+        re-ingests the whole prefix on re-admission."""
+        self._jobs.pop(slot, None)
 
     @property
     def has_work(self) -> bool:

@@ -55,6 +55,14 @@ class Request:
     #                                 last teacher-forced prompt step)
     t_first: Optional[float] = None  # wall time of the first generated token
     t_done: Optional[float] = None   # wall time generation finished
+    t_preempt: List[float] = dataclasses.field(default_factory=list)
+    #                                 wall times this request was preempted
+    #                                 (pages reclaimed, re-queued, its
+    #                                 prefix later recomputed)
+    prefix_hit_tokens: int = 0       # prompt tokens adopted from the
+    #                                 shared-prefix cache (prefill skipped)
+    recomputed_tokens: int = 0       # positions re-ingested after
+    #                                 preemption (recompute cost)
 
     @property
     def latency_s(self) -> Optional[float]:

@@ -8,7 +8,14 @@ many concurrent requests in the array).
 
 Admission is FIFO by (arrival, rid), which gives the no-starvation
 property tested in tests/test_serve_engine.py: a request can only be
-passed over by requests that arrived strictly earlier.
+passed over by requests that arrived strictly earlier.  A *preempted*
+request (``requeue``) keeps its original arrival, so it goes back to the
+head of the line — the engine preempts youngest-first and re-admits
+oldest-first, which is what makes recompute-on-preempt starvation-free.
+
+Bookkeeping is bounded: the admission-order trace keeps only the last
+``history`` rids (a deque), with a monotonic ``admitted_total`` counter —
+a long-lived engine's memory does not grow with total traffic.
 """
 from __future__ import annotations
 
@@ -19,13 +26,15 @@ from repro.serve.request import Request, RequestState
 
 
 class SlotScheduler:
-    def __init__(self, num_slots: int):
+    def __init__(self, num_slots: int, history: int = 4096):
         assert num_slots >= 1
         self.num_slots = num_slots
         self.free: deque = deque(range(num_slots))
         self.waiting: List[Request] = []
         self.active: Dict[int, Request] = {}
-        self.admitted_rids: List[int] = []   # admission order (for tests)
+        self._admitted_rids: deque = deque(maxlen=max(1, history))
+        self.admitted_total = 0
+        self.preemptions = 0
 
     # ------------------------------------------------------------ queue ----
 
@@ -55,7 +64,8 @@ class SlotScheduler:
             self.active[slot] = req
             req.slot = slot
             req.state = RequestState.ACTIVE
-            self.admitted_rids.append(req.rid)
+            self._admitted_rids.append(req.rid)
+            self.admitted_total += 1
             admitted.append((slot, req))
         return admitted
 
@@ -64,7 +74,25 @@ class SlotScheduler:
         req.state = RequestState.DONE
         self.free.append(slot)
 
+    def requeue(self, slot: int) -> Request:
+        """Preempt: push the slot's request back onto the waiting queue
+        (state WAITING, original arrival kept — it re-sorts to the head
+        of the FIFO) and free the slot.  The engine re-ingests the
+        request's generated prefix on re-admission."""
+        req = self.active.pop(slot)
+        req.state = RequestState.WAITING
+        req.slot = None
+        self.waiting.append(req)
+        self.free.append(slot)
+        self.preemptions += 1
+        return req
+
     # ------------------------------------------------------------ views ----
+
+    @property
+    def admitted_rids(self) -> List[int]:
+        """Admission order, most recent ``history`` entries (for tests)."""
+        return list(self._admitted_rids)
 
     @property
     def has_work(self) -> bool:

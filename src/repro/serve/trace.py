@@ -39,3 +39,45 @@ def percentiles(values: Sequence[float], qs=(50, 99)) -> dict:
         return {f"p{q}": float("nan") for q in qs}
     arr = np.asarray(values, np.float64)
     return {f"p{q}": float(np.percentile(arr, q)) for q in qs}
+
+
+class RollingStat:
+    """Streaming latency aggregate: exact count/mean plus a bounded
+    reservoir for percentiles.
+
+    The engine folds each request's latencies in at retire time instead
+    of rescanning its (now bounded) request history on every
+    ``report()`` call.  Up to ``cap`` samples the reservoir holds every
+    value, so short-trace percentiles are *identical* to the old
+    full-scan ``percentiles()``; past ``cap`` it degrades to a
+    uniform-without-replacement sample (Vitter's algorithm R) with a
+    seeded RNG, so reports stay deterministic for a given trace.
+    """
+
+    def __init__(self, cap: int = 2048, seed: int = 0):
+        assert cap >= 1
+        self.cap = cap
+        self.count = 0
+        self.total = 0.0
+        self._sample: List[float] = []
+        self._rng = np.random.default_rng(seed)
+
+    def add(self, value) -> None:
+        if value is None:
+            return
+        v = float(value)
+        self.count += 1
+        self.total += v
+        if len(self._sample) < self.cap:
+            self._sample.append(v)
+        else:
+            j = int(self._rng.integers(self.count))
+            if j < self.cap:
+                self._sample[j] = v
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else float("nan")
+
+    def percentiles(self, qs=(50, 99)) -> dict:
+        return percentiles(self._sample, qs)

@@ -1,0 +1,364 @@
+"""Shared-prefix COW page reuse + recompute-on-preempt eviction.
+
+Four pillars:
+
+* refcounted-allocator properties under random share/fork/evict/retire
+  interleavings (via the offline hypothesis shim): no double free, free
+  xor referenced, conservation;
+* equivalence — a shared-prefix hit run is token-identical to a cold run
+  (and to the contiguous engine) across archs and sparsity, and a
+  preempted-and-recomputed request's tokens are identical to an
+  undisturbed run;
+* the windowed-attention admission audit pin: ``possible``/``fits``
+  both use the capped per-pool ``pages_for`` need, so a sliding-window
+  request longer than its window is neither spuriously rejected nor
+  over-committed;
+* the bounded-history bugfix: engine memory and report cost stay
+  O(history) while streaming aggregates keep report fields identical to
+  the old full rescan on short traces.
+"""
+import warnings
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_smoke_config
+from repro.serve import (PagedKVCache, RequestRejected, RollingStat,
+                         ServeEngine)
+
+
+def _run(cfg, trace, **kw):
+    eng = ServeEngine(cfg, num_slots=2, max_len=32, seed=0, **kw)
+    reqs = [eng.submit(**spec) for spec in trace]
+    eng.run()
+    return eng, [r.tokens for r in reqs]
+
+
+def _shared_trace(n=4, plen=18, arrivals=40):
+    """Same 18-token prompt (two full 8-token blocks + tail), staggered
+    far enough apart that later requests admit after earlier ones
+    retire — every request past the first can adopt resident pages."""
+    prompt = list(range(1, plen + 1))
+    return [{"prompt": prompt, "max_new_tokens": 5,
+             "arrival": float(i * arrivals)} for i in range(n)]
+
+
+# ------------------------------------------------ allocator properties ----
+
+
+def _check_refcounts(kv):
+    for b, pool in kv.pools.items():
+        # table refs per page across slots + one per cache hold
+        refs = {}
+        for row in pool.table:
+            for pg in row[row != 0].tolist():
+                refs[pg] = refs.get(pg, 0) + 1
+        for e in kv.prefix.values():
+            pg = e.pages[b]
+            refs[pg] = refs.get(pg, 0) + 1
+        assert refs == pool.ref, f"{b}: refcounts drifted"
+        # free xor referenced, conservation, no double free
+        assert not set(refs) & set(pool.free), f"{b}: page free and live"
+        assert len(set(pool.free)) == len(pool.free), f"{b}: double free"
+        assert len(pool.free) + len(refs) == pool.pool_pages, \
+            f"{b}: pages leaked"
+        assert pool.in_use == len(refs)
+        assert all(r >= 1 for r in refs.values())
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.integers(0, 5), min_size=4, max_size=40),
+       st.integers(16, 64), st.sampled_from([4, 8]))
+def test_refcount_invariants_under_random_interleavings(ops, pool_tokens,
+                                                        page_len):
+    """Random share/fork/evict/retire interleavings on a windowed+global
+    arch: every transition preserves free-xor-referenced, exact
+    refcounts, and page conservation."""
+    cfg = get_smoke_config("gemma3-4b")
+    kv = PagedKVCache(cfg, num_slots=3, max_len=32, page_len=page_len,
+                      pool_tokens=pool_tokens, strict=False)
+    tokens = list(range(100, 164))
+    active = {}                              # slot -> next position
+    rng = np.random.default_rng(pool_tokens * 101 + page_len)
+    for op in ops:
+        if op == 0 and len(active) < 3:      # admit (maybe with a hit)
+            slot = next(s for s in range(3) if s not in active)
+            need = int(rng.integers(4, 24))
+            if not kv.reserve(need):
+                continue
+            _, blocks = kv.match_prefix(tokens[:need])
+            kv.admit(slot, need, prefix=blocks)
+            active[slot] = len(blocks) * page_len
+        elif op == 1 and active:             # advance one slot (may fork)
+            slot = int(rng.choice(list(active)))
+            try:
+                kv.ensure(slot, active[slot])
+            except Exception:                # OutOfPages: drop the op
+                continue
+            active[slot] += 1
+        elif op == 2 and active:             # register written blocks
+            slot = int(rng.choice(list(active)))
+            kv.register_prefix(slot, tokens, active[slot])
+        elif op == 3:
+            kv.evict_one()
+        elif op == 4 and active:             # retire
+            slot = int(rng.choice(list(active)))
+            kv.retire(slot)
+            del active[slot]
+        elif op == 5:                        # retire-all then re-admit
+            for slot in list(active):
+                kv.retire(slot)
+            active.clear()
+        _check_refcounts(kv)
+    for slot in list(active):
+        kv.retire(slot)
+        _check_refcounts(kv)
+    while kv.evict_one():
+        _check_refcounts(kv)
+    for pool in kv.pools.values():           # everything drained
+        assert pool.in_use == 0 and not pool.ref
+        assert sorted(pool.free) == list(range(1, pool.pool_pages + 1))
+
+
+# ------------------------------------------------------- equivalence -------
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "gemma3-4b"])
+@pytest.mark.parametrize("sparsity", [0.0, 0.75])
+def test_prefix_hit_matches_cold_and_contiguous(arch, sparsity):
+    """A shared-prefix hit run is token-identical to both the cold paged
+    run and the contiguous engine — adopted pages reconstruct exactly
+    the lines prefill would have written (gemma3's ring pools cap the
+    shareable region at the window and COW-fork on wrap)."""
+    cfg = get_smoke_config(arch)
+    trace = _shared_trace()
+    _, cont = _run(cfg, trace, sparsity=sparsity)
+    _, cold = _run(cfg, trace, sparsity=sparsity, paged=True, page_len=8)
+    eng, hot = _run(cfg, trace, sparsity=sparsity, paged=True, page_len=8,
+                    prefix_reuse=True)
+    assert hot == cold == cont
+    pr = eng.report()["prefix_reuse"]
+    assert pr["enabled"] and pr["hits"] >= 3 and pr["hit_tokens"] > 0
+    reqs = list(eng.requests)
+    assert reqs[0].prefix_hit_tokens == 0          # cold miss
+    assert all(r.prefix_hit_tokens > 0 for r in reqs[1:])
+
+
+def test_full_hit_skips_prefill_entirely():
+    """With the whole prompt-minus-one resident, TTFT collapses to
+    queue + first decode: the hit request spends zero steps ingesting
+    (prompt positions are never teacher-forced or chunk-prefilled)."""
+    cfg = get_smoke_config("olmo-1b")
+    prompt = list(range(1, 18))               # 17 tokens: 2 blocks + last
+    trace = [{"prompt": prompt, "max_new_tokens": 4, "arrival": 0.0},
+             {"prompt": prompt, "max_new_tokens": 4, "arrival": 40.0}]
+    eng, (t0, t1) = _run(cfg, trace, paged=True, page_len=8,
+                         prefix_reuse=True)
+    assert t0 == t1
+    hit = list(eng.requests)[1]
+    assert hit.prefix_hit_tokens == 16        # both full blocks adopted
+    # admitted at pos 16: one decode step per generated token only
+    assert hit.done_step - hit.admit_step + 1 == hit.max_new_tokens
+    cold = list(eng.requests)[0]
+    assert (cold.done_step - cold.admit_step + 1
+            == len(prompt) - 1 + cold.max_new_tokens)
+
+
+def test_prefix_hit_with_chunked_prefill_matches():
+    cfg = get_smoke_config("olmo-1b")
+    trace = _shared_trace()
+    _, cold = _run(cfg, trace, paged=True, page_len=8)
+    eng, hot = _run(cfg, trace, paged=True, page_len=8, prefill_chunk=4,
+                    prefix_reuse=True)
+    assert hot == cold
+    assert eng.report()["prefix_reuse"]["hits"] >= 3
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "gemma3-4b"])
+def test_preempted_request_recomputes_identical_tokens(arch):
+    """A pool too small for all four requests forces mid-flight
+    preemption in relaxed-commitment mode; every request still emits
+    exactly the tokens of the strict (undisturbed) run — preempted
+    requests replay their own history, and position-folded sampling
+    keys make the recompute deterministic."""
+    cfg = get_smoke_config(arch)
+    trace = [{"prompt": [i + 1, i + 2], "max_new_tokens": 12,
+              "arrival": 0.0} for i in range(4)]
+
+    def go(preempt):
+        eng = ServeEngine(cfg, num_slots=4, max_len=32, seed=0,
+                          paged=True, page_len=8, page_pool_tokens=48,
+                          preempt=preempt)
+        reqs = [eng.submit(**spec) for spec in trace]
+        eng.run()
+        return eng, [r.tokens for r in reqs]
+
+    strict_eng, strict = go(False)
+    relaxed_eng, relaxed = go(True)
+    assert relaxed == strict
+    pe = relaxed_eng.report()["prefix_reuse"]["preempt"]
+    assert pe["enabled"] and pe["count"] >= 1
+    assert pe["recomputed_tokens"] > 0
+    assert any(r.t_preempt for r in relaxed_eng.requests)
+    # relaxed commitment admits more concurrently at equal pool size
+    assert (relaxed_eng.report()["slot_occupancy"]
+            >= strict_eng.report()["slot_occupancy"])
+    # drained clean: no page leaked through the preemption path
+    assert relaxed_eng.report()["paging"]["pages_in_use"] == 0
+
+
+def test_preempted_sampled_request_recomputes_identical_tokens():
+    """Sampling keys fold the absolute position, so recompute determinism
+    holds for sampled (not just greedy) requests."""
+    cfg = get_smoke_config("olmo-1b")
+
+    def go(preempt):
+        eng = ServeEngine(cfg, num_slots=4, max_len=32, seed=0,
+                          paged=True, page_len=8, page_pool_tokens=48,
+                          preempt=preempt)
+        reqs = [eng.submit([i + 1, i + 2], max_new_tokens=12,
+                           temperature=1.0, seed=100 + i)
+                for i in range(4)]
+        eng.run()
+        return eng, [r.tokens for r in reqs]
+
+    _, strict = go(False)
+    eng, relaxed = go(True)
+    assert relaxed == strict
+    assert eng.report()["prefix_reuse"]["preempt"]["count"] >= 1
+
+
+def test_reuse_plus_preempt_token_identical_to_plain_paged():
+    """The acceptance matrix: reuse+preempt on vs off, same tokens."""
+    cfg = get_smoke_config("olmo-1b")
+    trace = _shared_trace(n=5, arrivals=12)
+    _, plain = _run(cfg, trace, paged=True, page_len=8)
+    eng, both = _run(cfg, trace, paged=True, page_len=8,
+                     page_pool_tokens=64, prefix_reuse=True, preempt=True)
+    assert both == plain
+    rep = eng.report()["prefix_reuse"]
+    assert rep["enabled"] and rep["preempt"]["enabled"]
+
+
+# --------------------------------------------------- fallback gating -------
+
+
+def test_recurrent_arch_reuse_falls_back_with_reason():
+    """Archs with recurrent mixer state can't skip ingestion (pages
+    don't capture that state): prefix reuse records a fallback and the
+    engine still serves correctly."""
+    cfg = get_smoke_config("jamba-v0.1-52b")  # mamba + attn hybrid
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        eng = ServeEngine(cfg, num_slots=2, max_len=16, seed=0,
+                          paged=True, page_len=8, prefix_reuse=True)
+    assert eng.prefix_reuse is False
+    assert "recurrent" in eng.prefix_fallback
+    assert any("prefix" in str(w.message) for w in caught)
+    req = eng.submit([1, 2, 3], max_new_tokens=3)
+    eng.run()
+    assert len(req.tokens) == 3
+    assert eng.report()["prefix_reuse"]["enabled"] is False
+
+
+def test_unpaged_engine_gates_both_knobs():
+    cfg = get_smoke_config("olmo-1b")
+    with warnings.catch_warnings(record=True):
+        warnings.simplefilter("always")
+        eng = ServeEngine(cfg, num_slots=2, max_len=16, seed=0,
+                          prefix_reuse=True, preempt=True)
+    assert eng.prefix_reuse is False and eng.preempt is False
+    assert "paged" in eng.prefix_fallback
+    assert "paged" in eng.preempt_fallback
+
+
+# ------------------------------------- windowed admission audit (pin) ------
+
+
+def test_windowed_need_uses_capped_pages_on_both_sides():
+    """Audit pin: a gemma3 request far longer than the sliding window
+    must pass ``possible()`` with a pool sized for the *capped* page
+    need (ring pools never touch more than their table width), and
+    ``reserve``/``fits`` must commit the same capped number — the
+    unwrapped token count appears on neither side."""
+    cfg = get_smoke_config("gemma3-4b")       # window 8 locals + globals
+    kv = PagedKVCache(cfg, num_slots=2, max_len=32, page_len=8)
+    need = 31                                 # 4 unwrapped pages
+    pf = kv.pages_for(need)
+    for b, pool in kv.pools.items():
+        if pool.ring:
+            assert pool.page_slots == 1 and pf[b] == 1   # capped, not 4
+        else:
+            assert pf[b] == 4
+    assert kv.possible(need)
+    assert kv.reserve(need)
+    for b, pool in kv.pools.items():
+        assert pool.committed == pf[b]        # committed == capped need
+    # a second worst-case request still fits: windowed pools are not
+    # over-committed by the unwrapped length
+    assert kv.fits(need)
+
+    # end-to-end: window-exceeding requests serve (and aren't rejected)
+    # through a pool sized only for the capped need
+    eng = ServeEngine(cfg, num_slots=2, max_len=32, seed=0, paged=True,
+                      page_len=8)
+    req = eng.submit([1, 2, 3], max_new_tokens=28)    # need 30 >> window
+    eng.run()
+    assert len(req.tokens) == 28
+
+
+# ------------------------------------------------- bounded history ---------
+
+
+def test_request_history_is_bounded_with_exact_short_trace_stats():
+    """The engine retains at most ``history`` retired requests and the
+    scheduler at most ``history`` admission rids, while streaming
+    aggregates keep short-trace report fields exact (count ≤ reservoir
+    cap ⇒ identical to a full rescan)."""
+    cfg = get_smoke_config("olmo-1b")
+    eng = ServeEngine(cfg, num_slots=2, max_len=16, seed=0, history=3)
+    reqs = [eng.submit([1 + i], max_new_tokens=2, arrival=float(2 * i))
+            for i in range(8)]
+    rep = eng.run()
+    assert rep["requests"] == 8               # exact count, streamed
+    assert rep["retained_requests"] == 3      # bounded retention
+    assert len(eng.requests) == 3
+    assert len(eng.scheduler.admitted_rids) == 3
+    assert eng.scheduler.admitted_total == 8
+    assert eng.scheduler.admitted_rids == [5, 6, 7]   # most recent, FIFO
+    # streamed aggregates match a full rescan over all requests
+    lats = sorted(r.latency_s for r in reqs)
+    assert rep["generated_tokens"] == 16
+    assert rep["latency_s"]["p50"] == pytest.approx(
+        float(np.percentile(lats, 50)))
+    assert rep["first_token_s"]["p50"] == pytest.approx(
+        float(np.percentile([r.first_token_s for r in reqs], 50)))
+
+
+def test_rolling_stat_exact_below_cap_and_bounded_above():
+    rs = RollingStat(cap=8, seed=0)
+    vals = [float(v) for v in range(1, 7)]
+    for v in vals:
+        rs.add(v)
+    rs.add(None)                              # ignored, like the old scan
+    assert rs.count == 6 and rs.mean == pytest.approx(3.5)
+    assert rs.percentiles()["p50"] == pytest.approx(
+        float(np.percentile(vals, 50)))
+    for v in range(1000):
+        rs.add(float(v))
+    assert rs.count == 1006
+    assert len(rs._sample) == 8               # reservoir stays bounded
+
+
+def test_rejection_still_typed_with_reuse_enabled():
+    cfg = get_smoke_config("olmo-1b")
+    eng = ServeEngine(cfg, num_slots=2, max_len=16, seed=0, paged=True,
+                      page_len=8, page_pool_tokens=8, prefix_reuse=True,
+                      preempt=True)
+    with pytest.raises(RequestRejected):
+        eng.submit([1], max_new_tokens=16)    # exceeds the whole pool
+    req = eng.submit([1], max_new_tokens=3)
+    eng.run()
+    assert len(req.tokens) == 3
