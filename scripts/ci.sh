@@ -37,4 +37,11 @@ PYTHONPATH=src python benchmarks/prefix_reuse.py --smoke \
     --requests 10 --max-len 64 --repeats 2 \
     --out BENCH_serve.json
 
+echo "== chaos smoke: seeded fault injection under audit (two archs) =="
+PYTHONPATH=src python scripts/chaos_smoke.py --archs olmo-1b gemma3-4b
+
+echo "== bench smoke: overload goodput / shed rate -> BENCH_serve.json (overload) =="
+PYTHONPATH=src python benchmarks/overload.py --smoke \
+    --requests 16 --max-len 48 --out BENCH_serve.json
+
 echo "CI OK"

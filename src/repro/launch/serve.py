@@ -16,7 +16,8 @@ import argparse
 
 import numpy as np
 
-from repro.serve import ServeEngine, poisson_trace
+from repro.serve import FaultPlan, ServeEngine, ServeOverloaded, \
+    poisson_trace
 
 
 def serve(arch: str, smoke: bool = True, batch: int = 4, steps: int = 32,
@@ -64,6 +65,11 @@ def serve_trace(arch: str, smoke: bool = True, slots: int = 4,
                 page_pool_tokens: int | None = None,
                 prefill_chunk: int = 0, prefix_reuse: bool = False,
                 preempt: bool = False,
+                deadline_ms: float | None = None,
+                max_queue: int | None = None,
+                ttft_budget_ms: float | None = None,
+                max_preempts: int = 8, audit: bool = False,
+                faults: "FaultPlan | None" = None,
                 verbose: bool = True) -> dict:
     """Continuous-batching mode: seeded Poisson arrivals into the engine.
 
@@ -85,6 +91,12 @@ def serve_trace(arch: str, smoke: bool = True, slots: int = 4,
     their prefill; ``preempt`` commits live pages only and reclaims by
     preempting + recomputing the youngest slot when the pool runs dry.
     Tokens are identical with both on or off.
+    ``deadline_ms`` expires requests that miss their latency budget;
+    ``max_queue`` / ``ttft_budget_ms`` shed arrivals under overload
+    (``ServeOverloaded`` — counted, not fatal); ``audit`` runs the
+    step-level invariant auditor + packed-tensor integrity scan;
+    ``faults`` injects a seeded ``repro.serve.FaultPlan`` (chaos
+    testing — see DESIGN_SERVING.md §Failure semantics).
     """
     eng = ServeEngine.from_arch(arch, smoke=smoke, num_slots=slots,
                                 max_len=max_len, sparsity=sparsity,
@@ -96,16 +108,27 @@ def serve_trace(arch: str, smoke: bool = True, slots: int = 4,
                                 page_pool_tokens=page_pool_tokens,
                                 prefill_chunk=prefill_chunk,
                                 prefix_reuse=prefix_reuse,
-                                preempt=preempt)
+                                preempt=preempt,
+                                deadline_ms=deadline_ms,
+                                max_queue=max_queue,
+                                ttft_budget_ms=ttft_budget_ms,
+                                max_preempts=max_preempts,
+                                audit=audit, faults=faults)
     prompt_len = (1, min(4, max_len))
     hi = max(1, min(max_new[1], max_len - prompt_len[1] + 1))
     lo = max(1, min(max_new[0], hi))
     trace = poisson_trace(requests, rate=rate, seed=seed,
                           vocab_size=eng.cfg.vocab_size,
                           prompt_len=prompt_len, max_new=(lo, hi))
+    shed_at_submit = 0
     with eng.mesh:
         for spec in trace:
-            eng.submit(**spec, temperature=temperature)
+            try:
+                eng.submit(**spec, temperature=temperature)
+            except ServeOverloaded:
+                # admission control said no — the typed rejection is the
+                # feature, not a failure; count it and keep the trace going
+                shed_at_submit += 1
         rep = eng.run()
     if verbose:
         ws = rep["weight_stream"]
@@ -160,6 +183,24 @@ def serve_trace(arch: str, smoke: bool = True, slots: int = 4,
                   f"{pe['recomputed_tokens']} tokens recomputed")
         elif pe["fallback"]:
             print(f"  preempt fallback: {pe['fallback']}")
+        lc = rep["lifecycle"]
+        shed = lc["shed"] + shed_at_submit
+        if lc["cancelled"] or lc["expired"] or shed:
+            print(f"lifecycle: {lc['cancelled']} cancelled / "
+                  f"{lc['expired']} expired / {shed} shed "
+                  f"({lc['wasted_tokens']} tokens wasted)")
+        if lc["quarantined"]:
+            print(f"  quarantined tensors: "
+                  f"{', '.join(sorted(lc['quarantined']))}")
+        if "faults" in lc:
+            fs = lc["faults"]
+            print(f"fault injection: {fs['fired']}/{fs['planned']} "
+                  f"faults fired (seed {fs['seed']})")
+        if "audit" in lc:
+            au = lc["audit"]
+            print(f"audit: {au['steps_checked']} steps checked, "
+                  f"{au['integrity_scans']} integrity scans over "
+                  f"{au['checksummed_tensors']} tensors, 0 violations")
         print(f"{rep['requests']} requests / {rep['generated_tokens']} "
               f"tokens in {rep['wall_s']:.2f}s over {slots} slots "
               f"(occupancy {rep['slot_occupancy']:.0%})")
@@ -213,9 +254,34 @@ def main():
                     help="commit live pages only and reclaim by "
                          "preempting + recomputing the youngest slot "
                          "when the pool runs dry (with --paged)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request latency budget from arrival-due to "
+                         "completion; misses end EXPIRED (typed "
+                         "DeadlineExceeded in request.result())")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="shed arrivals once this many requests are "
+                         "queued (typed ServeOverloaded; counted in "
+                         "report()['lifecycle'])")
+    ap.add_argument("--ttft-budget-ms", type=float, default=None,
+                    help="shed arrivals when estimated TTFT exceeds this "
+                         "budget (queue work / measured step rate)")
+    ap.add_argument("--max-preempts", type=int, default=8,
+                    help="preemption bound: a request preempted this many "
+                         "times re-admits pinned (worst-case page "
+                         "commitment, never victimized again)")
+    ap.add_argument("--audit", action="store_true",
+                    help="run the step-level invariant auditor + packed-"
+                         "tensor integrity scan every step (corruption "
+                         "quarantines to dense + deterministic replay)")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="inject a seeded FaultPlan.chaos() fault schedule "
+                         "(page squeezes, forced preempts, eviction "
+                         "storms, NaN logits, bitflips); implies --audit")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    faults = (FaultPlan.chaos(seed=args.chaos_seed)
+              if args.chaos_seed is not None else None)
     serve_trace(args.arch, smoke=args.smoke, slots=args.slots,
                 requests=args.requests, rate=args.rate,
                 max_len=args.max_len, sparsity=args.sparsity,
@@ -226,6 +292,10 @@ def main():
                 page_pool_tokens=args.page_pool_tokens,
                 prefill_chunk=args.prefill_chunk,
                 prefix_reuse=args.prefix_reuse, preempt=args.preempt,
+                deadline_ms=args.deadline_ms, max_queue=args.max_queue,
+                ttft_budget_ms=args.ttft_budget_ms,
+                max_preempts=args.max_preempts,
+                audit=args.audit or faults is not None, faults=faults,
                 seed=args.seed, model_parallel=args.model_parallel)
 
 

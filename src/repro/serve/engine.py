@@ -37,6 +37,21 @@ system:
 Positions are per-slot: the decode step takes a (B,) position vector so
 each slot advances through its own sequence independently (the models
 layer grew vector-position support for exactly this).
+
+**Request lifecycle + failure semantics** (DESIGN_SERVING.md §Failure
+semantics): every request ends in exactly one terminal state — DONE,
+CANCELLED (``engine.cancel(rid)``, valid queued / mid-prefill /
+mid-decode / mid-preempt-replay), EXPIRED (``deadline_ms`` elapsed), or
+SHED (admission control under overload raises/records the typed
+``ServeOverloaded``).  A request preempted ``max_preempts`` times is
+*pinned*: it re-admits with a worst-case (reserved-page) commitment and
+is excluded from victim selection, so recompute-on-preempt can never
+livelock one request.  ``audit=True`` runs the step-level invariant
+auditor (``repro.serve.faults.InvariantAuditor``) and turns on packed-
+tensor integrity scanning: a corrupted tensor (seeded ``FaultPlan``
+bitflips, NaN-poisoned heads, or real bit-rot) is quarantined to its
+dense fallback with a recorded manifest reason and the engine replays
+the affected step deterministically instead of serving garbage.
 """
 from __future__ import annotations
 
@@ -57,10 +72,13 @@ from repro.launch.steps import build_prefill_step, build_serve_step
 from repro.models.config import ModelConfig
 from repro.models.model import init_params, lm_head_weight
 from repro.serve.cache import SlotKVCache
+from repro.serve.errors import (DeadlineExceeded, RequestRejected,
+                                ServeOverloaded)
+from repro.serve.faults import FaultPlan, InvariantAuditor
 from repro.serve.packed import PackedModel, choose_block, pack_model
 from repro.serve.paging import OutOfPages, PagedKVCache
 from repro.serve.prefill import PrefillPlanner
-from repro.serve.request import Request, RequestRejected
+from repro.serve.request import Request, RequestState
 from repro.serve.scheduler import SlotScheduler
 from repro.serve.trace import RollingStat
 from repro.sparse.format import BitmapWeight, pack_bitmap
@@ -99,7 +117,12 @@ class ServeEngine:
                  paged: bool = False, page_len: int = 16,
                  page_pool_tokens: Optional[int] = None,
                  prefill_chunk: int = 0, prefix_reuse: bool = False,
-                 preempt: bool = False, history: int = 512):
+                 preempt: bool = False, history: int = 512,
+                 deadline_ms: Optional[float] = None,
+                 max_queue: Optional[int] = None,
+                 ttft_budget_ms: Optional[float] = None,
+                 max_preempts: int = 8, audit: bool = False,
+                 faults: Optional[FaultPlan] = None):
         """``head_sparsity``: ``global_l1_prune`` deliberately keeps
         (tied) embeddings dense, so the LM head is additionally pruned
         per-tensor to this level before packing — that is what gives the
@@ -165,12 +188,50 @@ class ServeEngine:
         deque); latency aggregates are folded in at retire time
         (``RollingStat``), so a long-lived engine's memory and
         ``report()`` cost stay O(history), not O(total traffic).
+
+        ``deadline_ms``: default per-request latency budget, measured
+        from the moment a request's arrival comes due; requests that
+        blow it — queued or mid-flight — expire with a recorded
+        ``DeadlineExceeded`` (``submit(deadline_ms=...)`` overrides
+        per request; None = no deadline).
+
+        ``max_queue`` / ``ttft_budget_ms``: admission-control load
+        shedding.  A request that comes due while more than
+        ``max_queue`` requests are already due-and-waiting, or while
+        the estimated TTFT (queue drain at the observed step rate)
+        exceeds ``ttft_budget_ms``, is shed with a typed
+        ``ServeOverloaded`` — raised from ``submit`` for requests due
+        immediately, recorded on the request for future arrivals.
+        None disables shedding (the pre-hardening behavior: queue
+        forever).
+
+        ``max_preempts``: bounded-preemption policy.  A request
+        preempted this many times re-admits *pinned* — worst-case page
+        commitment (the reserved-page fast path) and excluded from
+        victim selection — so it finishes instead of livelocking.
+
+        ``audit``: run the step-level invariant auditor every step
+        (scheduler slots, page refcount conservation, free xor
+        referenced, table aliasing, request-state legality, finite
+        logits) plus packed-tensor integrity scans; corruption is
+        quarantined to the dense fallback and the step replayed.
+
+        ``faults``: a seeded ``repro.serve.faults.FaultPlan`` whose
+        scheduled faults the engine fires at each step start — the
+        chaos harness.  Injected faults are deterministic and (under
+        ``audit=True``) recoverable: served tokens stay bit-identical
+        to a fault-free run.
         """
         self.cfg = cfg
         self.num_slots = num_slots
         self.max_len = max_len
         self.sparsity = sparsity
         self.mesh = make_elastic_mesh(model_parallel)
+        # fallback bookkeeping: every recorded reason lands in
+        # ``self.fallbacks`` (mirrored by report()["fallbacks"]) and is
+        # warned at most once per (key, reason) per engine instance
+        self.fallbacks: Dict[str, str] = {}
+        self._warned: set = set()
 
         params = init_params(jax.random.PRNGKey(seed), cfg)
         if sparsity > 0:
@@ -198,10 +259,13 @@ class ServeEngine:
             self.stream_fallback = (
                 f"model_parallel={mp_actual}: no sharded layout for "
                 f"packed weights yet; stack served dense")
-            warnings.warn(f"whole-stack bitmap streaming fell back to "
-                          f"dense: {self.stream_fallback}", stacklevel=2)
+            self._warn_fallback(
+                "stream", self.stream_fallback,
+                f"whole-stack bitmap streaming fell back to dense: "
+                f"{self.stream_fallback}")
         elif not stream_weights:
             self.stream_fallback = "stream_weights=False"
+            self.fallbacks["stream"] = self.stream_fallback
         self.packed: Optional[PackedModel] = (
             pack_model(self.params, cache_dense=cache_dense)
             if stream_weights else None)
@@ -217,11 +281,14 @@ class ServeEngine:
                     f"no (BK, BN) tile divides (d_model={cfg.d_model}, "
                     f"vocab={cfg.vocab_size}) with BN % 8 == 0; "
                     f"head served dense")
-                warnings.warn(f"bitmap LM head fell back to dense: "
-                              f"{self.head_fallback}", stacklevel=2)
+                self._warn_fallback(
+                    "head", self.head_fallback,
+                    f"bitmap LM head fell back to dense: "
+                    f"{self.head_fallback}")
         else:
             self.lm_weight = None
             self.head_fallback = "disabled (bitmap_head=False)"
+            self.fallbacks["head"] = self.head_fallback
         self.head_compression = (self.lm_weight.compression
                                  if self.lm_weight is not None else 1.0)
 
@@ -237,15 +304,16 @@ class ServeEngine:
             self.paging_fallback = (
                 f"model_parallel={mp_actual}: no sharded layout for paged "
                 f"KV pools yet; contiguous cache kept")
-            warnings.warn(f"paged KV cache fell back to contiguous: "
-                          f"{self.paging_fallback}", stacklevel=2)
         elif not any(b.mixer == "attn" for b in cfg.pattern):
             page_len = 0
             self.paging_fallback = (
                 f"{cfg.name}: no attention blocks — recurrent state is "
                 f"O(1)/slot, nothing to page")
-            warnings.warn(f"paged KV cache fell back to contiguous: "
-                          f"{self.paging_fallback}", stacklevel=2)
+        if self.paging_fallback:
+            self._warn_fallback(
+                "paging", self.paging_fallback,
+                f"paged KV cache fell back to contiguous: "
+                f"{self.paging_fallback}")
         self.page_len = page_len
 
         # shared-prefix reuse + preemption both live on the paged cache;
@@ -271,8 +339,10 @@ class ServeEngine:
                     f"would drop it")
             if self.prefix_fallback:
                 prefix_reuse = False
-                warnings.warn(f"shared-prefix reuse fell back: "
-                              f"{self.prefix_fallback}", stacklevel=2)
+                self._warn_fallback(
+                    "prefix_reuse", self.prefix_fallback,
+                    f"shared-prefix reuse fell back: "
+                    f"{self.prefix_fallback}")
         self.prefix_reuse = prefix_reuse
         self.preempt_fallback: Optional[str] = None
         if preempt:
@@ -287,8 +357,10 @@ class ServeEngine:
                     f"diverge from its first run")
             if self.preempt_fallback:
                 preempt = False
-                warnings.warn(f"recompute-on-preempt fell back: "
-                              f"{self.preempt_fallback}", stacklevel=2)
+                self._warn_fallback(
+                    "preempt", self.preempt_fallback,
+                    f"recompute-on-preempt fell back: "
+                    f"{self.preempt_fallback}")
         self.preempt = preempt
 
         self.kv = (PagedKVCache(cfg, num_slots, max_len, page_len,
@@ -319,9 +391,10 @@ class ServeEngine:
                     f"no chunked prefill path yet; teacher-forcing kept")
             if self.prefill_fallback:
                 prefill_chunk = 0
-                warnings.warn(f"chunked prefill fell back to "
-                              f"teacher-forcing: {self.prefill_fallback}",
-                              stacklevel=2)
+                self._warn_fallback(
+                    "prefill", self.prefill_fallback,
+                    f"chunked prefill fell back to teacher-forcing: "
+                    f"{self.prefill_fallback}")
         self.prefill_chunk = prefill_chunk
         self.planner: Optional[PrefillPlanner] = (
             PrefillPlanner(num_slots, prefill_chunk)
@@ -377,28 +450,66 @@ class ServeEngine:
         self._ftl_miss = RollingStat(seed=7)
         self._t0: Optional[float] = None
 
+        # ---- lifecycle hardening: deadlines, shedding, bounded
+        # preemption, fault injection + invariant auditing ----
+        self.deadline_ms = deadline_ms
+        self.max_queue = max_queue
+        self.ttft_budget_ms = ttft_budget_ms
+        self.max_preempts = max_preempts
+        self._has_deadlines = deadline_ms is not None
+        self._cancelled = 0
+        self._expired = 0
+        self._shed = 0
+        self._forced_preempts = 0
+        self._wasted_tokens = 0    # tokens generated by aborted requests
+        self._step_wall_ema: Optional[float] = None  # TTFT estimator
+        self.quarantined: Dict[str, str] = {}
+        self.faults = faults
+        self.audit = audit
+        # checksums are taken here, before any fault can fire — the
+        # auditor's integrity scans compare against this pristine state
+        self.auditor: Optional[InvariantAuditor] = (
+            InvariantAuditor(self) if audit else None)
+
     @classmethod
     def from_arch(cls, arch: str, smoke: bool = True, **kw) -> "ServeEngine":
         cfg = get_smoke_config(arch) if smoke else get_config(arch)
         return cls(cfg, **kw)
+
+    def _warn_fallback(self, key: str, reason: str,
+                       message: Optional[str] = None) -> None:
+        """Record a fallback reason (mirrored into
+        ``report()["fallbacks"]``) and warn it — once per (key, reason)
+        per engine instance, never once per request or step."""
+        self.fallbacks[key] = reason
+        msg = message or f"{key} fell back: {reason}"
+        if (key, reason) not in self._warned:
+            self._warned.add((key, reason))
+            warnings.warn(msg, stacklevel=3)
 
     # ------------------------------------------------------------ intake ----
 
     def submit(self, prompt: Sequence[int], max_new_tokens: int,
                arrival: float = 0.0, temperature: float = 0.0,
                seed: Optional[int] = None,
-               top_k: Optional[int] = None) -> Request:
+               top_k: Optional[int] = None,
+               deadline_ms: Optional[float] = None) -> Request:
         """``temperature`` > 0 samples this request's tokens with its own
         PRNG stream, seeded by ``seed`` (default: engine seed + rid); 0
         stays greedy.  ``top_k`` truncates *this request's* sampling
-        (None: the engine default; 0: no truncation).
+        (None: the engine default; 0: no truncation).  ``deadline_ms``
+        overrides the engine-default latency budget for this request
+        (measured from the moment its arrival comes due).
 
         Raises ``RequestRejected`` (typed, process keeps serving) when
         the request can never run: empty prompt, a generation budget
         below one token, budget beyond ``max_len``, or — under paging —
-        a worst-case page need larger than the whole pool.  A merely
-        *busy* engine never rejects; the request queues until slots (and
-        pages) free up."""
+        a worst-case page need larger than the whole pool.  Raises
+        ``ServeOverloaded`` when the request is due *now* and admission
+        control is shedding (``max_queue`` / ``ttft_budget_ms``);
+        future arrivals are accepted and re-checked when they come due.
+        A merely *busy* engine without shedding configured never
+        rejects; the request queues until slots (and pages) free up."""
         prompt = [int(t) for t in prompt]
         if not prompt:
             raise RequestRejected("empty prompt")
@@ -418,9 +529,20 @@ class ServeEngine:
                 f"prompt {len(prompt)} + {max_new_tokens} new tokens needs "
                 f"more pages than the whole pool holds "
                 f"(page_len={self.page_len}); raise page_pool_tokens")
+        if arrival <= self._steps:
+            reason = self._overload_reason()
+            if reason is not None:
+                self._shed += 1
+                raise ServeOverloaded(
+                    reason, queue_depth=self._due_depth(),
+                    est_ttft_s=self.estimated_ttft_s())
         req = Request(rid=self._next_rid, prompt=prompt,
                       max_new_tokens=max_new_tokens, arrival=arrival,
-                      temperature=temperature, seed=seed, top_k=top_k)
+                      temperature=temperature, seed=seed, top_k=top_k,
+                      deadline_ms=(deadline_ms if deadline_ms is not None
+                                   else self.deadline_ms))
+        if req.deadline_ms is not None:
+            self._has_deadlines = True
         if temperature > 0:
             self._use_sampling = True
         if top_k is not None and top_k != self.top_k_default:
@@ -431,6 +553,110 @@ class ServeEngine:
         # old append-on-submit list grew with total traffic forever)
         self.scheduler.submit(req)
         return req
+
+    # -------------------------------------------------------- lifecycle ----
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request by rid, valid at every lifecycle stage:
+        queued (including mid-preempt-replay requeue), mid-prefill, or
+        mid-decode.  Pages and prefix-cache references are released
+        exactly; partial tokens are kept on the request (state
+        CANCELLED, no error — the client asked).  Returns False for an
+        unknown or already-terminal rid."""
+        for r in self.scheduler.waiting:
+            if r.rid == rid:
+                self.scheduler.cancel_waiting(r)
+                r.transition(RequestState.CANCELLED)
+                self._abort(r, RequestState.CANCELLED)
+                return True
+        for slot, r in list(self.scheduler.active.items()):
+            if r.rid == rid:
+                req = self._release_slot(slot, RequestState.CANCELLED)
+                self._abort(req, RequestState.CANCELLED)
+                return True
+        return False
+
+    def _release_slot(self, slot: int, state: RequestState) -> Request:
+        """Tear a slot down into any terminal state through one path —
+        planner job, pages, ingest history, and sampling lanes are all
+        released, so no abort route can leak."""
+        if self.planner is not None:
+            self.planner.cancel(slot)
+        req = self.scheduler.release(slot, state=state)
+        if self.page_len:
+            self.kv.retire(slot)
+        self._ingest.pop(slot, None)
+        self._pos[slot] = 0
+        self._temp[slot] = 0.0
+        self._topk[slot] = 0
+        return req
+
+    def _abort(self, req: Request, state: RequestState,
+               error: Optional[Exception] = None) -> None:
+        """Terminal bookkeeping for the non-DONE outcomes."""
+        req.error = error
+        req.done_step = self._steps
+        if self._t0 is not None:
+            req.t_done = self._wall()
+        if state is RequestState.CANCELLED:
+            self._cancelled += 1
+        elif state is RequestState.EXPIRED:
+            self._expired += 1
+        elif state is RequestState.SHED:
+            self._shed += 1
+        self._wasted_tokens += len(req.tokens)
+        self.requests.append(req)
+
+    def _due_depth(self) -> int:
+        """Waiting requests whose arrival has come due."""
+        return sum(1 for r in self.scheduler.waiting
+                   if r.arrival <= self._steps)
+
+    def estimated_ttft_s(self) -> Optional[float]:
+        """Deterministic queue-drain TTFT estimate for a request
+        arriving now: outstanding work tokens (due queue + live
+        remainder) spread over the slots, at the observed per-step wall
+        EMA.  None until the first step has been timed."""
+        if self._step_wall_ema is None:
+            return None
+        work = 0
+        for r in self.scheduler.waiting:
+            if r.arrival <= self._steps:
+                work += len(r.prompt) + r.max_new_tokens - 1
+        for slot, r in self.scheduler.active.items():
+            total = len(r.prompt) + r.max_new_tokens - 1
+            work += max(0, total - int(self._pos[slot]))
+        return (work / self.num_slots) * self._step_wall_ema
+
+    def _overload_reason(self, exclude_self: bool = False) -> Optional[str]:
+        """Shed reason if admission control refuses a request due now.
+
+        ``exclude_self``: the step-start sweep evaluates a request that
+        already sits in the waiting queue, so it must not count toward
+        its own queue depth (a lone request on an idle engine is never
+        "overload")."""
+        depth = self._due_depth() - (1 if exclude_self else 0)
+        if self.max_queue is not None and depth >= self.max_queue:
+            return f"queue depth {depth} >= max_queue {self.max_queue}"
+        if self.ttft_budget_ms is not None:
+            est = self.estimated_ttft_s()
+            if est is not None and est * 1e3 > self.ttft_budget_ms:
+                return (f"estimated TTFT {est * 1e3:.1f}ms > budget "
+                        f"{self.ttft_budget_ms:.1f}ms")
+        return None
+
+    def _deadline_passed(self, req: Request, wall: float) -> bool:
+        return (req.deadline_ms is not None and req.t_due is not None
+                and (wall - req.t_due) * 1e3 > req.deadline_ms)
+
+    def _pinned(self, slot: int) -> bool:
+        """A slot whose request exhausted its preemption budget: it
+        holds a worst-case (reserved) page commitment and is excluded
+        from victim selection — the reserved-page fast path that lets
+        an over-preempted request finish instead of livelocking."""
+        req = self.scheduler.active.get(slot)
+        return (req is not None
+                and len(req.t_preempt) >= self.max_preempts)
 
     # ------------------------------------------------------------- loop ----
 
@@ -443,8 +669,11 @@ class ServeEngine:
         fail mid-flight; preemptible mode commits only the *live* ingest
         (prompt + tokens already generated before a preemption) — more
         requests fit the same pool, and growth past the commitment is
-        covered by recompute-on-preempt."""
-        if self.preempt:
+        covered by recompute-on-preempt.  A request that exhausted its
+        ``max_preempts`` budget re-admits with the worst case even in
+        preemptible mode: its pages are genuinely reserved, so it can
+        run to completion untouched (the pinned fast path)."""
+        if self.preempt and len(req.t_preempt) < self.max_preempts:
             return len(req.prompt) + len(req.tokens)
         return len(req.prompt) + req.max_new_tokens - 1
 
@@ -459,11 +688,18 @@ class ServeEngine:
                 self._reclaim(requester)
 
     def _reclaim(self, requester: int) -> None:
-        victims = [s for s in self.scheduler.active if s != requester]
-        # unreachable by construction: submit() checks possible(), and a
-        # lone slot's own pages never exceed its capped worst case, so a
-        # dry pool always implicates an evictable cache entry (already
-        # drained) or another slot
+        victims = [s for s in self.scheduler.active
+                   if s != requester and not self._pinned(s)]
+        if not victims and self.kv.restore_held():
+            # a fault-injected page squeeze confiscated the headroom and
+            # there is no one left to preempt: hand the pages back early
+            # rather than deadlocking the pinned/last request
+            return
+        # unreachable by construction: submit() checks possible(), a
+        # lone slot's own pages never exceed its capped worst case, and
+        # pinned slots hold worst-case commitments (they never need to
+        # steal) — a dry pool always implicates an evictable cache entry
+        # (already drained) or a preemptable slot
         assert victims, "page pool exhausted with no preemptable slot"
         victim = max(victims, key=lambda s: int(self._admit_seq[s]))
         self._preempt_slot(victim)
@@ -480,7 +716,8 @@ class ServeEngine:
         if self.planner is not None:
             self.planner.cancel(slot)
         self.scheduler.requeue(slot)
-        self.kv.retire(slot)
+        if self.page_len:
+            self.kv.retire(slot)
         self._ingest.pop(slot, None)
         self._pos[slot] = 0
         self._temp[slot] = 0.0
@@ -499,6 +736,55 @@ class ServeEngine:
         (self._ftl_hit if req.prefix_hit_tokens > 0
          else self._ftl_miss).add(req.first_token_s)
         self.requests.append(req)
+
+    def _recover_corruption(self, logits, decoding: List[int]) -> bool:
+        """Integrity scan + quarantine + deterministic replay (the
+        ``audit=True`` corruption path).  Returns True when corruption
+        was found — the caller then discards the step's results.
+
+        Detection: every packed tensor (stack leaves + LM head) is
+        checksummed against its pack-time CRC and scanned for
+        non-finite values.  Recovery: each corrupted tensor is
+        *quarantined* — its packed leaf becomes None so
+        ``matmul_or_bitmap`` dispatches the pristine dense params
+        tensor, with the reason recorded in the manifest — then the
+        prefix cache is flushed (published pages may hold KV lines
+        written through the corrupt path) and every active slot is
+        preempted, so all in-flight requests replay through the clean
+        path.  Packing is lossless and replay deterministic, so the
+        recovered stream is bit-identical to a never-faulted run.
+        Non-finite logits with *no* attributable tensor raise
+        ``AuditViolation`` instead — that is a bug, not a recoverable
+        fault."""
+        bad = self.auditor.integrity_scan()
+        if not bad:
+            if logits is not None:
+                self.auditor.check_logits(np.asarray(logits), decoding)
+            return False
+        for path in bad:
+            reason = ("quarantined: integrity checksum mismatch "
+                      "(served dense from pristine params)")
+            if path == "lm_head":
+                self.lm_weight = None
+                self.head_fallback = reason
+                self.head_compression = 1.0
+                self._warn_fallback(
+                    "head", reason,
+                    f"bitmap LM head quarantined to dense: corrupted "
+                    f"value/bitmap payload detected")
+            else:
+                self.packed.quarantine(path, reason)
+                self._warn_fallback(
+                    f"quarantine:{path}", reason,
+                    f"packed tensor {path} quarantined to dense: "
+                    f"corrupted value/bitmap payload detected")
+            self.quarantined[path] = reason
+            self.auditor.drop(path)
+        if self.page_len:
+            self.kv.flush_prefix()
+        for slot in list(self.scheduler.active):
+            self._preempt_slot(slot)
+        return True
 
     def _decode(self, tok: jnp.ndarray, pos: jnp.ndarray):
         packed = self.packed.blocks if self.packed is not None else None
@@ -626,10 +912,36 @@ class ServeEngine:
         self.warmup()
         if self._t0 is None:
             self._t0 = time.perf_counter()
+        t_begin = time.perf_counter()
         now = float(self._steps)
-        for r in self.scheduler.waiting:
+        if self.faults is not None:
+            self.faults.fire(self, self._steps)
+        shedding = (self.max_queue is not None
+                    or self.ttft_budget_ms is not None)
+        for r in list(self.scheduler.waiting):
             if r.arrival <= now and r.t_due is None:
                 r.t_due = self._wall()
+                if shedding:
+                    reason = self._overload_reason(exclude_self=True)
+                    if reason is not None:
+                        # came due while overloaded: shed silently with
+                        # the typed error recorded (submit already
+                        # raised for requests due at submission time)
+                        self.scheduler.cancel_waiting(r)
+                        r.transition(RequestState.SHED)
+                        self._abort(r, RequestState.SHED,
+                                    error=ServeOverloaded(
+                                        reason,
+                                        queue_depth=self._due_depth()))
+                        continue
+            if self._has_deadlines and self._deadline_passed(
+                    r, self._wall()):
+                self.scheduler.cancel_waiting(r)
+                r.transition(RequestState.EXPIRED)
+                self._abort(r, RequestState.EXPIRED,
+                            error=DeadlineExceeded(
+                                f"rid {r.rid}: queued past its "
+                                f"{r.deadline_ms:.0f}ms deadline"))
         fits = None
         if self.page_len:
             # out-of-pages: the head-of-line request queues (strict FIFO)
@@ -709,52 +1021,77 @@ class ServeEngine:
                             s, int(self._pos[s])), slot)
                 decoding = [s for s in self.scheduler.active
                             if not in_prefill(s)]
-            nxt, _, cache = self._decode(jnp.asarray(self._tok[:, None]),
-                                         jnp.asarray(self._pos))
+            nxt, logits, cache = self._decode(
+                jnp.asarray(self._tok[:, None]), jnp.asarray(self._pos))
             self.kv.cache = cache
             nxt_host = np.asarray(nxt)
             wall = self._wall()
 
-            self._active_slot_steps += len(decoding)
-            for slot, req in list(self.scheduler.active.items()):
-                if in_prefill(slot):
-                    continue
-                ing = self._ingest[slot]
-                p = int(self._pos[slot])
-                self._pos[slot] = p + 1
-                if (self.prefix_reuse and (p + 1) % self.page_len == 0):
-                    # a block boundary just filled: publish it (prompt
-                    # *and* generated blocks — identical greedy requests
-                    # reuse each other's generations too)
-                    self.kv.register_prefix(slot, ing, p + 1)
-                if p + 1 < len(ing):
-                    # still consuming prompt/recompute history: teacher-
-                    # force the next token (legacy walk, or a preempted
-                    # request replaying its generated prefix)
-                    self._tok[slot] = ing[p + 1]
-                    if (p + 1 == len(ing) - 1
-                            and req.t_prefill_done is None):
-                        req.t_prefill_done = wall  # prompt cache resident
-                    continue
-                t = int(nxt_host[slot])
-                req.tokens.append(t)
-                ing.append(t)
-                if req.t_first is None:
-                    req.t_first = wall
-                self._tok[slot] = t
-                if (len(req.tokens) >= req.max_new_tokens
-                        or p + 1 >= self.max_len):
-                    req.t_done = wall
-                    req.done_step = self._steps
-                    self.scheduler.release(slot)
-                    if self.page_len:
-                        self.kv.retire(slot)   # pages back to the free list
-                    self._ingest.pop(slot, None)
-                    self._pos[slot] = 0
-                    self._temp[slot] = 0.0     # freed slots decode greedy
-                    self._topk[slot] = 0
-                    self._retire(req)
+            if self.audit and self._recover_corruption(logits, decoding):
+                # a corrupted tensor was quarantined and every active
+                # slot preempted: nothing from this step is committed —
+                # the requests replay deterministically through the now-
+                # clean (dense-fallback) path, emitting the exact tokens
+                # the uncorrupted step would have
+                pass
+            else:
+                self._active_slot_steps += len(decoding)
+                for slot, req in list(self.scheduler.active.items()):
+                    if in_prefill(slot):
+                        continue
+                    ing = self._ingest[slot]
+                    p = int(self._pos[slot])
+                    self._pos[slot] = p + 1
+                    if (self.prefix_reuse
+                            and (p + 1) % self.page_len == 0):
+                        # a block boundary just filled: publish it
+                        # (prompt *and* generated blocks — identical
+                        # greedy requests reuse each other's
+                        # generations too)
+                        self.kv.register_prefix(slot, ing, p + 1)
+                    if p + 1 < len(ing):
+                        # still consuming prompt/recompute history:
+                        # teacher-force the next token (legacy walk, or
+                        # a preempted request replaying its generated
+                        # prefix)
+                        self._tok[slot] = ing[p + 1]
+                        if (p + 1 == len(ing) - 1
+                                and req.t_prefill_done is None):
+                            req.t_prefill_done = wall  # cache resident
+                        continue
+                    t = int(nxt_host[slot])
+                    req.tokens.append(t)
+                    ing.append(t)
+                    if req.t_first is None:
+                        req.t_first = wall
+                    self._tok[slot] = t
+                    if (len(req.tokens) >= req.max_new_tokens
+                            or p + 1 >= self.max_len):
+                        req.t_done = wall
+                        req.done_step = self._steps
+                        self._release_slot(slot, RequestState.DONE)
+                        self._retire(req)
             self._decode_steps += 1
+        elif self.audit:
+            # prefill-only step: no logits to check, but a fault may
+            # have corrupted tensors the prefill call just consumed
+            self._recover_corruption(None, [])
+        if self._has_deadlines:
+            wall = self._wall()
+            for slot in list(self.scheduler.active):
+                req = self.scheduler.active[slot]
+                if self._deadline_passed(req, wall):
+                    self._release_slot(slot, RequestState.EXPIRED)
+                    self._abort(req, RequestState.EXPIRED,
+                                error=DeadlineExceeded(
+                                    f"rid {req.rid}: exceeded its "
+                                    f"{req.deadline_ms:.0f}ms deadline "
+                                    f"mid-flight"))
+        if self.auditor is not None:
+            self.auditor.check_step()
+        dt = time.perf_counter() - t_begin
+        self._step_wall_ema = (dt if self._step_wall_ema is None
+                               else 0.8 * self._step_wall_ema + 0.2 * dt)
         self._steps += 1
 
     def run(self) -> dict:
@@ -857,6 +1194,37 @@ class ServeEngine:
             rep.update(self.kv.prefix_report())
         return rep
 
+    def lifecycle_report(self) -> dict:
+        """Terminal-state taxonomy + overload/fault accounting.
+
+        Every request the engine has ever retired lands in exactly one
+        terminal state (DONE / CANCELLED / EXPIRED / SHED); the counts
+        here partition ``requests + retained`` minus what is still
+        queued or active.  ``shed`` additionally counts submit-time
+        rejections (no Request object is retained for those)."""
+        by_state: Dict[str, int] = {}
+        for req in self.requests:
+            by_state[req.state.name] = by_state.get(req.state.name, 0) + 1
+        rep = {
+            "deadline_ms": self.deadline_ms,
+            "max_queue": self.max_queue,
+            "ttft_budget_ms": self.ttft_budget_ms,
+            "max_preempts": self.max_preempts,
+            "cancelled": self._cancelled,
+            "expired": self._expired,
+            "shed": self._shed,
+            "forced_preempts": self._forced_preempts,
+            "wasted_tokens": self._wasted_tokens,
+            "estimated_ttft_s": self.estimated_ttft_s(),
+            "terminal_states": by_state,
+            "quarantined": dict(self.quarantined),
+        }
+        if self.faults is not None:
+            rep["faults"] = self.faults.summary()
+        if self.auditor is not None:
+            rep["audit"] = self.auditor.report()
+        return rep
+
     def report(self) -> dict:
         dt = self._wall() if self._t0 is not None else 0.0
         gen = self._gen_tokens
@@ -905,4 +1273,6 @@ class ServeEngine:
             "weight_stream": self.weight_stream_report(),
             "paging": paging,
             "cache_resets": self.kv.resets,
+            "lifecycle": self.lifecycle_report(),
+            "fallbacks": dict(self.fallbacks),
         }

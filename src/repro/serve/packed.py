@@ -145,6 +145,44 @@ class PackedModel:
     def fallback_entries(self) -> List[PackEntry]:
         return [e for e in self.manifest if not e.packed]
 
+    def leaves(self) -> List[Tuple[str, BitmapWeight]]:
+        """Every currently-packed ``(path, BitmapWeight)`` leaf, manifest
+        order — the fault injector's target list and the integrity
+        auditor's checksum domain."""
+        out = []
+        for bname, bdict in self.blocks.items():
+            for comp, tensors in bdict.items():
+                for name, bw in tensors.items():
+                    if bw is not None:
+                        out.append((f"blocks/{bname}/{comp}/{name}", bw))
+        return out
+
+    def replace_leaf(self, path: str, bw: Optional[BitmapWeight]) -> None:
+        """Swap the leaf at ``path`` (fault injection writes a corrupted
+        copy; quarantine writes ``None``)."""
+        _, bname, comp, name = path.split("/")
+        assert name in self.blocks[bname][comp], path
+        self.blocks[bname][comp][name] = bw
+
+    def quarantine(self, path: str, reason: str) -> bool:
+        """Serve ``path`` dense from now on: the leaf becomes ``None``
+        (``matmul_or_bitmap`` dispatches the dense params tensor) and
+        the manifest entry flips to a recorded fallback carrying
+        ``reason``, so ``stream_report()`` and the fallback snapshot
+        reflect the quarantine.  Returns False if already dense."""
+        _, bname, comp, name = path.split("/")
+        if self.blocks.get(bname, {}).get(comp, {}).get(name) is None:
+            return False
+        self.blocks[bname][comp][name] = None
+        for e in self.manifest:
+            if e.path == path:
+                e.packed = False
+                e.reason = reason
+                e.layout = "dense"
+                e.block = None
+                e.sparse_bytes = e.dense_bytes
+        return True
+
     def stream_report(self, activated_experts: Optional[int] = None) -> Dict:
         """Modeled per-step weight-HBM bytes across the stack (no head —
         the engine adds its head term on top).

@@ -99,16 +99,9 @@ import numpy as np
 from repro.models.config import ModelConfig
 from repro.models.model import (attn_capacity, init_cache,
                                 paged_addressing, paged_layout)
+from repro.serve.errors import AuditViolation, OutOfPages
 
-
-class OutOfPages(RuntimeError):
-    """Raised (non-strict mode only) when an allocation finds the free
-    list dry after the prefix cache has been drained — the engine's cue
-    to preempt the youngest slot and recompute it later."""
-
-    def __init__(self, bname: str):
-        super().__init__(f"{bname}: page pool exhausted")
-        self.bname = bname
+__all__ = ["OutOfPages", "PagePool", "PagedKVCache", "PrefixBlock"]
 
 
 @dataclasses.dataclass
@@ -128,6 +121,9 @@ class PagePool:
     committed: int = 0     # admission-reserved worst-case pages
     in_use: int = 0        # pages off the free list (any refcount)
     peak: int = 0
+    held: List[int] = dataclasses.field(default_factory=list)
+    #                      # fault-injection: pages confiscated from the
+    #                      # free list (neither free nor referenced)
 
 
 @dataclasses.dataclass
@@ -270,8 +266,10 @@ class PagedKVCache:
 
     def fits(self, need_tokens: int) -> bool:
         """Can this request be admitted *now* without risking mid-flight
-        page exhaustion for anyone already committed?"""
-        return all(self.pools[b].committed + n <= self.pools[b].pool_pages
+        page exhaustion for anyone already committed?  Confiscated
+        (fault-held) pages shrink the usable pool until restored."""
+        return all(self.pools[b].committed + n
+                   <= self.pools[b].pool_pages - len(self.pools[b].held)
                    for b, n in self.pages_for(need_tokens).items())
 
     def reserve(self, need_tokens: int) -> bool:
@@ -568,6 +566,107 @@ class PagedKVCache:
         self.evictions += 1
         return True
 
+    # ------------------------------------------------- fault injection ----
+
+    def confiscate(self, n: int) -> int:
+        """Fault injection: pull up to ``n`` free pages per pool out of
+        circulation (neither free nor referenced) to simulate pool
+        exhaustion.  In strict mode only uncommitted headroom is taken —
+        the commitment invariant (``ensure`` never fails) must survive
+        any injected squeeze.  Returns the total pages held."""
+        taken = 0
+        for pool in self.pools.values():
+            take = min(n, len(pool.free))
+            if self.strict:
+                take = min(take, max(0, pool.pool_pages - pool.committed
+                                     - len(pool.held)))
+            for _ in range(take):
+                pool.held.append(pool.free.pop())
+            taken += take
+        return taken
+
+    def restore_held(self) -> int:
+        """Return every confiscated page to its free list.  Idempotent;
+        returns the number of pages restored."""
+        out = 0
+        for pool in self.pools.values():
+            out += len(pool.held)
+            while pool.held:
+                pool.free.append(pool.held.pop())
+        return out
+
+    def flush_prefix(self) -> int:
+        """Evict the entire prefix cache (the eviction-storm fault, and
+        the corruption-recovery hammer: published pages may hold bytes
+        written through a corrupted weight path).  Returns the number of
+        blocks evicted."""
+        n = 0
+        while self.evict_one():
+            n += 1
+        return n
+
+    # ------------------------------------------------------------ audit ----
+
+    def audit(self, commit_check: bool = True) -> None:
+        """Full allocator invariant check (raises ``AuditViolation``):
+
+        * refcount exactness: each page's refcount equals its table
+          mappings plus one per prefix-cache hold;
+        * free xor referenced (plus fault-held), no double free, and
+          conservation: ``free + referenced + held == pool_pages``;
+        * no table entry aliases the trash page's id range, and no two
+          entries of the *same* slot map the same physical page;
+        * commitment bookkeeping matches the per-slot reservations.
+        """
+        for b, pool in self.pools.items():
+            refs: Dict[int, int] = {}
+            for slot in range(self.num_slots):
+                row = pool.table[slot]
+                live = [int(p) for p in row[row != 0]]
+                if len(live) != len(set(live)):
+                    raise AuditViolation(
+                        f"{b}: slot {slot} table aliases a page: {live}")
+                for pg in live:
+                    refs[pg] = refs.get(pg, 0) + 1
+            for e in self.prefix.values():
+                pg = e.pages[b]
+                refs[pg] = refs.get(pg, 0) + 1
+            if refs != pool.ref:
+                drift = {pg: (refs.get(pg), pool.ref.get(pg))
+                         for pg in set(refs) | set(pool.ref)
+                         if refs.get(pg) != pool.ref.get(pg)}
+                raise AuditViolation(f"{b}: refcount drift "
+                                     f"(actual, recorded) = {drift}")
+            free = pool.free
+            if len(free) != len(set(free)):
+                raise AuditViolation(f"{b}: duplicate free page")
+            if set(free) & set(refs):
+                raise AuditViolation(
+                    f"{b}: page both free and referenced: "
+                    f"{sorted(set(free) & set(refs))}")
+            ids = set(free) | set(refs) | set(pool.held)
+            if not all(1 <= pg <= pool.pool_pages for pg in ids):
+                raise AuditViolation(
+                    f"{b}: page id out of range (trash page leaked?)")
+            if len(free) + len(refs) + len(pool.held) != pool.pool_pages:
+                raise AuditViolation(
+                    f"{b}: conservation broken — {len(free)} free + "
+                    f"{len(refs)} referenced + {len(pool.held)} held "
+                    f"!= {pool.pool_pages}")
+            if pool.in_use != len(refs):
+                raise AuditViolation(
+                    f"{b}: in_use={pool.in_use} != {len(refs)} referenced")
+            if commit_check:
+                want = sum(c.get(b, 0) for c in self._commit)
+                if pool.committed != want:
+                    raise AuditViolation(
+                        f"{b}: committed={pool.committed} != {want} "
+                        f"summed over slot reservations")
+                if pool.committed > pool.pool_pages:
+                    raise AuditViolation(
+                        f"{b}: over-committed {pool.committed} of "
+                        f"{pool.pool_pages}")
+
     # ------------------------------------------------------------ step ----
 
     def tables(self) -> Dict[str, jnp.ndarray]:
@@ -634,7 +733,7 @@ class PagedKVCache:
             "pages_total": total,
             "pools": {b: {"pages": p.pool_pages, "in_use": p.in_use,
                           "peak": p.peak, "page_slots": p.page_slots,
-                          "ring": p.ring}
+                          "ring": p.ring, "held": len(p.held)}
                       for b, p in self.pools.items()},
             "reserved_kv_bytes": reserved,
             "contiguous_kv_bytes": contiguous,

@@ -52,9 +52,11 @@ full-matrix test in tests/test_packed_streaming.py):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Sequence, Set, Tuple
 
 import numpy as np
+
+from repro.serve.errors import AuditViolation
 
 
 @dataclasses.dataclass
@@ -154,6 +156,22 @@ class PrefillPlanner:
         self.calls += 1
         self.tokens_prefilled += int(lens.sum())
         return tokens, pos, lens, finished
+
+    # ------------------------------------------------------------ audit ----
+
+    def audit(self, active_slots: Set[int]) -> None:
+        """Planner invariants (raises ``AuditViolation``): every job
+        belongs to a currently active slot (a cancelled/retired slot
+        must not keep a plan), and its cursor stays inside the prompt."""
+        for slot, job in self._jobs.items():
+            if slot not in active_slots:
+                raise AuditViolation(
+                    f"prefill job for slot {slot} which is not active")
+            if not (0 <= job.next <= job.end <= len(job.prompt)):
+                raise AuditViolation(
+                    f"prefill cursor out of range for slot {slot}: "
+                    f"next={job.next} end={job.end} "
+                    f"prompt={len(job.prompt)}")
 
     # --------------------------------------------------------- reports ----
 

@@ -22,6 +22,7 @@ from __future__ import annotations
 from collections import deque
 from typing import Dict, List, Tuple
 
+from repro.serve.errors import AuditViolation
 from repro.serve.request import Request, RequestState
 
 
@@ -39,7 +40,7 @@ class SlotScheduler:
     # ------------------------------------------------------------ queue ----
 
     def submit(self, req: Request) -> None:
-        req.state = RequestState.WAITING
+        req.transition(RequestState.WAITING)
         self.waiting.append(req)
 
     def admit(self, now: float, fits=None) -> List[Tuple[int, Request]]:
@@ -63,16 +64,20 @@ class SlotScheduler:
             slot = self.free.popleft()
             self.active[slot] = req
             req.slot = slot
-            req.state = RequestState.ACTIVE
+            req.transition(RequestState.ACTIVE)
             self._admitted_rids.append(req.rid)
             self.admitted_total += 1
             admitted.append((slot, req))
         return admitted
 
-    def release(self, slot: int) -> None:
+    def release(self, slot: int,
+                state: RequestState = RequestState.DONE) -> Request:
+        """Free a slot into any terminal state (DONE by default; the
+        engine passes CANCELLED / EXPIRED for aborted requests)."""
         req = self.active.pop(slot)
-        req.state = RequestState.DONE
+        req.transition(state)
         self.free.append(slot)
+        return req
 
     def requeue(self, slot: int) -> Request:
         """Preempt: push the slot's request back onto the waiting queue
@@ -80,12 +85,17 @@ class SlotScheduler:
         of the FIFO) and free the slot.  The engine re-ingests the
         request's generated prefix on re-admission."""
         req = self.active.pop(slot)
-        req.state = RequestState.WAITING
+        req.transition(RequestState.WAITING)
         req.slot = None
         self.waiting.append(req)
         self.free.append(slot)
         self.preemptions += 1
         return req
+
+    def cancel_waiting(self, req: Request) -> None:
+        """Drop a queued request (client cancel / deadline expiry /
+        shedding).  The caller applies the terminal transition."""
+        self.waiting.remove(req)
 
     # ------------------------------------------------------------ views ----
 
@@ -105,3 +115,31 @@ class SlotScheduler:
     def next_arrival(self) -> float:
         assert self.waiting
         return min(r.arrival for r in self.waiting)
+
+    # ------------------------------------------------------------ audit ----
+
+    def audit(self) -> None:
+        """Slot-bookkeeping invariants (raises ``AuditViolation``):
+        free and active slots partition [0, num_slots); no slot is freed
+        twice; every active request agrees it owns its slot; every
+        queued request is WAITING."""
+        free = list(self.free)
+        free_set, active_set = set(free), set(self.active)
+        if len(free) != len(free_set):
+            raise AuditViolation(f"duplicate free slot: {sorted(free)}")
+        if free_set & active_set:
+            raise AuditViolation(
+                f"slot both free and active: {sorted(free_set & active_set)}")
+        if free_set | active_set != set(range(self.num_slots)):
+            raise AuditViolation(
+                f"slots lost: free={sorted(free_set)} "
+                f"active={sorted(active_set)} of {self.num_slots}")
+        for slot, req in self.active.items():
+            if req.state is not RequestState.ACTIVE or req.slot != slot:
+                raise AuditViolation(
+                    f"slot {slot}: rid {req.rid} state={req.state.value} "
+                    f"claims slot {req.slot}")
+        for req in self.waiting:
+            if req.state is not RequestState.WAITING:
+                raise AuditViolation(
+                    f"queued rid {req.rid} in state {req.state.value}")

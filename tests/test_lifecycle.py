@@ -1,0 +1,370 @@
+"""Request-lifecycle hardening: deadlines, cancellation, load shedding.
+
+Four pillars:
+
+* the typed error taxonomy — every non-DONE outcome carries a
+  ``ServeError`` subclass, exported from ``repro.serve`` and raised (or
+  recorded on the request) instead of crashing the process;
+* cancellation at every lifecycle stage — queued, mid-prefill,
+  mid-decode, and mid-preempt-replay — releases pages and prefix-cache
+  references exactly (allocator audit clean, zero pages in use after
+  drain) and never perturbs the surviving requests' tokens (random
+  cancel interleavings via the offline hypothesis shim);
+* deadline expiry (queued and mid-flight) and admission-control load
+  shedding produce the EXPIRED / SHED terminal states with
+  ``DeadlineExceeded`` / ``ServeOverloaded`` recorded;
+* bounded preemption — a forced-preemption storm cannot preempt any
+  request more than ``max_preempts`` times (the pinned reserved-page
+  fast path), and every request still finishes with the undisturbed
+  run's exact tokens.
+"""
+import warnings
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_smoke_config
+from repro.serve import (AuditViolation, DeadlineExceeded, FaultPlan,
+                         OutOfPages, Request, RequestRejected,
+                         RequestState, ServeEngine, ServeError,
+                         ServeOverloaded, TERMINAL_STATES)
+
+CFG = get_smoke_config("olmo-1b")
+
+
+def _engine(**kw):
+    kw.setdefault("num_slots", 2)
+    kw.setdefault("max_len", 48)
+    kw.setdefault("sparsity", 0.5)
+    return ServeEngine(CFG, seed=0, **kw)
+
+
+def _drain(eng, cancels=None):
+    """Step until drained, firing ``cancels``: {step: [rid, ...]}."""
+    cancels = cancels or {}
+    step = 0
+    while eng.scheduler.has_work:
+        for rid in cancels.get(step, []):
+            eng.cancel(rid)
+        eng.step()
+        step += 1
+        assert step < 10_000, "engine failed to drain"
+    return {r.rid: list(r.tokens) for r in eng.requests}
+
+
+PROMPTS = [[1, 2, 3, 4, 5, 6, 7, 8, 9, 10], [4, 5, 6], [1, 2, 3, 4, 5, 6],
+           [9, 8, 7, 6, 5]]
+
+
+def _submit_all(eng, n=4, max_new=6):
+    return [eng.submit(PROMPTS[i % len(PROMPTS)], max_new,
+                       arrival=float(i)) for i in range(n)]
+
+
+# ------------------------------------------------------ error taxonomy ----
+
+
+def test_error_hierarchy():
+    assert issubclass(RequestRejected, ServeError)
+    assert issubclass(RequestRejected, ValueError)   # legacy contract
+    assert issubclass(OutOfPages, ServeError)
+    assert issubclass(OutOfPages, RuntimeError)      # legacy contract
+    assert issubclass(ServeOverloaded, ServeError)
+    assert issubclass(DeadlineExceeded, ServeError)
+    assert issubclass(AuditViolation, ServeError)
+    assert issubclass(AuditViolation, AssertionError)
+    e = ServeOverloaded("queue full", queue_depth=7, est_ttft_s=0.5)
+    assert e.queue_depth == 7 and e.est_ttft_s == 0.5
+    assert "queue full" in str(e)
+
+
+def test_state_machine_legality():
+    req = Request(rid=0, prompt=[1], max_new_tokens=1)
+    req.transition(RequestState.WAITING)
+    req.transition(RequestState.ACTIVE)
+    with pytest.raises(AuditViolation):
+        req.transition(RequestState.SHED)      # ACTIVE can't be shed
+    req.transition(RequestState.DONE)
+    assert req.terminal
+    with pytest.raises(AuditViolation):
+        req.transition(RequestState.WAITING)   # terminal is final
+    assert TERMINAL_STATES == {RequestState.DONE, RequestState.CANCELLED,
+                               RequestState.EXPIRED, RequestState.SHED}
+
+
+# -------------------------------------------------------- cancellation ----
+
+
+def test_cancel_queued_and_unknown_rid():
+    eng = _engine()
+    reqs = _submit_all(eng, n=4)
+    # rid 3 is still queued (arrival 3.0, no steps run)
+    assert eng.cancel(reqs[3].rid)
+    assert reqs[3].state is RequestState.CANCELLED
+    assert reqs[3].tokens == []
+    assert reqs[3].error is None               # client asked: no error
+    assert reqs[3].result() == []
+    assert not eng.cancel(reqs[3].rid)         # already terminal
+    assert not eng.cancel(999)                 # unknown
+    toks = _drain(eng)
+    assert all(reqs[i].state is RequestState.DONE for i in range(3))
+    assert eng.report()["lifecycle"]["cancelled"] == 1
+    assert toks[reqs[3].rid] == []
+
+
+@pytest.mark.parametrize("kw", [
+    dict(),                                                # contiguous
+    dict(paged=True, page_len=8, prefill_chunk=4),         # mid-prefill
+    dict(paged=True, page_len=8, prefix_reuse=True,
+         preempt=True, prefill_chunk=4),                   # full stack
+])
+def test_cancel_mid_flight_no_leak_no_perturbation(kw):
+    """Cancel one request while it is actively decoding (or prefilling):
+    the survivors' tokens match the undisturbed run exactly, and the
+    paged allocator audits clean with zero pages in use after drain."""
+    eng0 = _engine(**kw)
+    reqs0 = _submit_all(eng0)
+    base = _drain(eng0)
+    eng = _engine(**kw)
+    reqs = _submit_all(eng)
+    victim = reqs[1].rid
+    toks = _drain(eng, cancels={2: [victim]})
+    assert reqs[1].state in (RequestState.CANCELLED, RequestState.DONE)
+    if reqs[1].state is RequestState.CANCELLED:
+        # partial tokens are a prefix of what it would have generated
+        assert base[victim][:len(toks[victim])] == toks[victim]
+    for r in reqs:
+        if r.rid != victim:
+            assert r.state is RequestState.DONE
+            assert toks[r.rid] == base[r.rid], f"rid {r.rid} perturbed"
+    if eng.page_len:
+        eng.kv.flush_prefix()
+        eng.kv.audit()
+        for pool in eng.kv.pools.values():
+            assert not pool.ref and not pool.held
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 3), st.integers(0, 12), st.integers(0, 3))
+def test_cancel_random_interleavings(victim_i, cancel_step, extra):
+    """Random (victim, step) cancel interleavings over the full paged +
+    reuse + preempt + prefill stack: survivors always match the
+    undisturbed baseline and nothing leaks."""
+    kw = dict(paged=True, page_len=8, page_pool_tokens=96,
+              prefix_reuse=True, preempt=True, prefill_chunk=4)
+    eng0 = _engine(**kw)
+    reqs0 = _submit_all(eng0)
+    base = _drain(eng0)
+    eng = _engine(**kw)
+    reqs = _submit_all(eng)
+    victim = reqs[victim_i].rid
+    cancels = {cancel_step: [victim]}
+    if extra != victim_i:           # sometimes cancel a second request
+        cancels.setdefault(cancel_step + 1, []).append(reqs[extra].rid)
+    toks = _drain(eng, cancels=cancels)
+    cancelled = {rid for rids in cancels.values() for rid in rids}
+    for r in reqs:
+        assert r.terminal
+        if r.state is RequestState.DONE and r.rid not in cancelled:
+            assert toks[r.rid] == base[r.rid], f"rid {r.rid} perturbed"
+    eng.kv.flush_prefix()
+    eng.kv.audit()
+    for pool in eng.kv.pools.values():
+        assert not pool.ref and not pool.held
+    lc = eng.report()["lifecycle"]
+    assert lc["cancelled"] == sum(1 for r in reqs
+                                  if r.state is RequestState.CANCELLED)
+
+
+def test_cancel_mid_preempt_replay():
+    """Cancel a request while it is re-queued behind a preemption (its
+    ``t_preempt`` mark is set, state WAITING): the requeue entry leaves
+    the queue, pages stay clean, survivors undisturbed."""
+    kw = dict(paged=True, page_len=8, prefill_chunk=4, prefix_reuse=True,
+              preempt=True)
+    eng0 = _engine(**kw)
+    reqs0 = _submit_all(eng0)
+    base = _drain(eng0)
+
+    eng = _engine(**kw)
+    reqs = _submit_all(eng)
+    for _ in range(4):
+        eng.step()
+    # preempt the youngest active slot between steps: its request sits
+    # in the requeue (state WAITING, t_preempt marked) when we cancel
+    slot = max(eng.scheduler.active,
+               key=lambda s: int(eng._admit_seq[s]))
+    victim = eng.scheduler.active[slot]
+    eng._preempt_slot(slot)
+    assert victim.state is RequestState.WAITING and victim.t_preempt
+    assert eng.cancel(victim.rid)
+    assert victim.state is RequestState.CANCELLED
+    toks = _drain(eng)
+    for r in reqs:
+        if r.rid != victim.rid:
+            assert r.state is RequestState.DONE
+            assert toks[r.rid] == base[r.rid]
+    eng.kv.flush_prefix()
+    eng.kv.audit()
+    for pool in eng.kv.pools.values():
+        assert not pool.ref and not pool.held
+
+
+# ------------------------------------------------------------ deadlines ----
+
+
+def test_deadline_expires_queued_request():
+    eng = _engine(num_slots=1, max_len=64)
+    blocker = eng.submit(list(range(1, 5)), 30, arrival=0.0)
+    starved = eng.submit([1, 2, 3], 5, arrival=0.0, deadline_ms=0.0)
+    _drain(eng)
+    assert blocker.state is RequestState.DONE
+    assert starved.state is RequestState.EXPIRED
+    assert isinstance(starved.error, DeadlineExceeded)
+    with pytest.raises(DeadlineExceeded):
+        starved.result()
+    assert eng.report()["lifecycle"]["expired"] == 1
+
+
+def test_deadline_expires_mid_decode_keeps_partial_tokens():
+    eng = _engine()
+    req = eng.submit([1, 2, 3], 40, arrival=0.0, deadline_ms=1e9)
+    ok = eng.submit([4, 5, 6], 4, arrival=0.0)     # no deadline
+    for _ in range(6):                             # let it decode a bit
+        eng.step()
+    assert req.state is RequestState.ACTIVE
+    req.deadline_ms = 0.0                          # budget just ran out
+    eng.step()
+    assert req.state is RequestState.EXPIRED
+    assert 0 < len(req.tokens) < 40                # cut off mid-flight
+    assert isinstance(req.error, DeadlineExceeded)
+    assert "mid-flight" in str(req.error)
+    _drain(eng)
+    assert ok.state is RequestState.DONE and len(ok.tokens) == 4
+
+
+def test_generous_deadline_never_fires():
+    eng = _engine(deadline_ms=600_000.0)           # engine-wide default
+    reqs = _submit_all(eng)
+    _drain(eng)
+    assert all(r.state is RequestState.DONE for r in reqs)
+    assert eng.report()["lifecycle"]["expired"] == 0
+
+
+# --------------------------------------------------------- load shedding ----
+
+
+def test_submit_time_shedding_raises_typed():
+    eng = _engine(num_slots=1, max_queue=2)
+    eng.submit([1, 2], 20, arrival=0.0)            # queues (depth 0)
+    eng.submit([3, 4], 4, arrival=0.0)             # depth 1 < 2: accepted
+    with pytest.raises(ServeOverloaded) as ei:
+        eng.submit([5, 6], 4, arrival=0.0)         # depth 2 >= 2: shed
+    assert ei.value.queue_depth >= 2
+    shed_before = eng.report()["lifecycle"]["shed"]
+    assert shed_before >= 1
+    _drain(eng)                                    # keeps serving
+    assert eng.report()["lifecycle"]["shed"] == shed_before
+
+
+def test_due_time_shedding_records_silently():
+    eng = _engine(num_slots=1, max_len=64, max_queue=1)
+    blocker = eng.submit(list(range(1, 5)), 24, arrival=0.0)
+    late = [eng.submit([1, 2, 3], 4, arrival=2.0) for _ in range(3)]
+    _drain(eng)
+    assert blocker.state is RequestState.DONE
+    states = [r.state for r in late]
+    assert RequestState.SHED in states
+    for r in late:
+        assert r.terminal
+        if r.state is RequestState.SHED:
+            assert isinstance(r.error, ServeOverloaded)
+            with pytest.raises(ServeOverloaded):
+                r.result()
+    lc = eng.report()["lifecycle"]
+    assert lc["shed"] == states.count(RequestState.SHED)
+    assert lc["terminal_states"].get("SHED") == lc["shed"]
+
+
+def test_no_shedding_configured_never_rejects_busy_engine():
+    eng = _engine(num_slots=1)
+    reqs = [eng.submit([1, 2, 3], 6, arrival=0.0) for _ in range(6)]
+    _drain(eng)
+    assert all(r.state is RequestState.DONE for r in reqs)
+    assert eng.report()["lifecycle"]["shed"] == 0
+
+
+# ------------------------------------------------- bounded preemption ----
+
+
+def test_forced_preempt_storm_respects_max_preempts():
+    """A preemption storm cannot preempt any request more than
+    ``max_preempts`` times: once pinned, a request holds a worst-case
+    (reserved-page) commitment and is excluded from victim selection,
+    so it finishes — with the undisturbed run's exact tokens."""
+    kw = dict(paged=True, page_len=8, prefix_reuse=True, preempt=True,
+              prefill_chunk=4, max_len=64)
+    eng0 = _engine(**kw)
+    reqs0 = _submit_all(eng0, max_new=8)
+    base = _drain(eng0)
+
+    plan = FaultPlan(seed=0)
+    for s in range(2, 26, 2):
+        plan.force_preempt(step=s, count=1)
+    eng = _engine(**kw, max_preempts=2, faults=plan, audit=True)
+    reqs = _submit_all(eng, max_new=8)
+    toks = _drain(eng)
+    assert eng._forced_preempts > 0
+    for r in reqs:
+        assert r.state is RequestState.DONE
+        assert len(r.t_preempt) <= 2, f"rid {r.rid} over-preempted"
+        assert toks[r.rid] == base[r.rid], f"rid {r.rid} diverged"
+    eng.kv.flush_prefix()
+    eng.kv.audit()
+    for pool in eng.kv.pools.values():
+        assert not pool.ref and not pool.held
+
+
+# ------------------------------------------------------ fallback dedup ----
+
+
+def test_fallback_warnings_dedupe_and_mirror_into_report():
+    eng = _engine()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        eng._warn_fallback("k", "some reason", "message one")
+        eng._warn_fallback("k", "some reason", "message one")
+        eng._warn_fallback("k", "other reason", "message two")
+    assert [str(x.message) for x in w] == ["message one", "message two"]
+    assert eng.fallbacks["k"] == "other reason"     # latest wins
+    assert eng.report()["fallbacks"]["k"] == "other reason"
+
+
+def test_init_fallbacks_are_recorded():
+    with warnings.catch_warnings(record=True):
+        warnings.simplefilter("always")
+        eng = _engine(prefix_reuse=True)            # needs paged: falls back
+    assert "prefix_reuse" in eng.fallbacks
+    assert eng.report()["prefix_reuse"]["fallback"] is not None
+
+
+# ------------------------------------------------------ taxonomy totals ----
+
+
+def test_terminal_taxonomy_partitions_history():
+    eng = _engine(num_slots=1, max_len=64, max_queue=2)
+    eng.submit(list(range(1, 5)), 20, arrival=0.0)
+    eng.submit([1, 2], 4, arrival=0.0, deadline_ms=0.0)   # will expire
+    doomed = eng.submit([3, 4], 4, arrival=1.0)
+    eng.submit([5, 6], 4, arrival=1.0)
+    cancel_me = eng.submit([7, 8], 4, arrival=2.0)
+    eng.cancel(cancel_me.rid)
+    _drain(eng)
+    lc = eng.report()["lifecycle"]
+    tax = lc["terminal_states"]
+    assert sum(tax.values()) == len(eng.requests)
+    assert tax.get("CANCELLED", 0) == lc["cancelled"] == 1
+    assert tax.get("EXPIRED", 0) == lc["expired"]
+    assert lc["wasted_tokens"] >= 0
