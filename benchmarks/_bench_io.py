@@ -1,0 +1,98 @@
+"""Shared BENCH_serve.json I/O for the serving benchmarks.
+
+Every bench under ``benchmarks/`` merges its own section into one
+shared JSON file (``--out BENCH_serve.json``) so downstream tooling
+(`roofline.py`, EXPERIMENTS.md tables) reads a single artifact.  The
+load → merge-preserving-others → write dance was copy-pasted five
+times; this module is the one implementation, with two upgrades:
+
+* **atomic write** — the merged file lands via ``tempfile`` +
+  ``os.replace`` in the target directory, so a crashed or interrupted
+  bench can never leave a half-written ``BENCH_serve.json`` behind;
+* **timed sections** — ``bench_timer`` wraps a bench run and records
+  its wall time into a ``repro.serve.telemetry.MetricsRegistry``
+  histogram (``bench.<section>.wall_s``), and ``merge_section``
+  stamps ``bench_wall_s`` into the section so the bench file carries
+  how long each section took to produce.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+import tempfile
+import time
+from typing import Dict, Iterator, Optional
+
+from repro.serve.telemetry import MetricsRegistry
+
+# the module-level registry every bench's timer records into; one
+# process typically runs one bench, but a sweep driver importing
+# several benches sees them all side by side in one snapshot
+REGISTRY = MetricsRegistry()
+
+
+def load_bench(path: str) -> Dict:
+    """The bench file's current contents ({} when absent)."""
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        return json.load(f)
+
+
+def write_atomic(path: str, data: Dict) -> None:
+    """Write ``data`` as indented JSON via a same-directory tempfile +
+    ``os.replace``: readers see the old file or the new file, never a
+    torn one."""
+    d = os.path.dirname(os.path.abspath(path))
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=".bench_", suffix=".json")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(data, f, indent=2)
+            f.write("\n")
+        os.replace(tmp, path)
+    except BaseException:
+        with contextlib.suppress(OSError):
+            os.unlink(tmp)
+        raise
+
+
+def merge_section(path: str, section: str, result: Dict,
+                  wall_s: Optional[float] = None,
+                  verbose: bool = True) -> Dict:
+    """Merge ``result`` under ``data[section]``, preserving every other
+    section, and write atomically.  ``wall_s`` (e.g. from
+    ``bench_timer``) is stamped into the section as ``bench_wall_s``.
+    Returns the full merged document."""
+    data = load_bench(path)
+    if wall_s is not None:
+        result = {**result, "bench_wall_s": wall_s}
+    data[section] = result
+    write_atomic(path, data)
+    if verbose:
+        print(f"merged {section} section into {path}")
+    return data
+
+
+@contextlib.contextmanager
+def bench_timer(section: str,
+                registry: Optional[MetricsRegistry] = None) -> Iterator:
+    """Time a bench run into ``bench.<section>.wall_s`` on the shared
+    registry.  Yields an object whose ``.wall_s`` holds the elapsed
+    seconds after the block exits — pass it to ``merge_section``."""
+    reg = REGISTRY if registry is None else registry
+    name = f"bench.{section}.wall_s"
+    hist = (reg.get(name) if name in reg.names
+            else reg.histogram(name,
+                               help=f"wall time of the {section} bench"))
+
+    class _Timing:
+        wall_s: Optional[float] = None
+
+    timing = _Timing()
+    t0 = time.perf_counter()
+    try:
+        yield timing
+    finally:
+        timing.wall_s = time.perf_counter() - t0
+        hist.observe(timing.wall_s)

@@ -25,11 +25,14 @@ bench file, preserving the other tools' sections.
 from __future__ import annotations
 
 import argparse
-import json
-import os
 
 from repro.configs import get_config, get_smoke_config
 from repro.serve import ServeEngine, poisson_trace
+
+try:                                    # script: benchmarks/ on sys.path
+    from _bench_io import bench_timer, load_bench, write_atomic
+except ImportError:                     # package: imported from repo root
+    from benchmarks._bench_io import bench_timer, load_bench, write_atomic
 
 
 def _run_engine(cfg, *, slots: int, sparsity: float, requests: int,
@@ -137,24 +140,23 @@ def main():
                          "file (e.g. BENCH_serve.json)")
     args = ap.parse_args()
     rows, headlines = [], {}
-    for arch in args.archs:
-        result = sweep(arch, smoke=args.smoke,
-                       sparsities=tuple(args.sparsities),
-                       slots_list=tuple(args.slots), requests=args.requests,
-                       rate=args.rate, max_len=args.max_len, seed=args.seed,
-                       repeats=args.repeats)
-        rows.extend(result["rows"])
-        headlines[arch] = result["headline"]
+    with bench_timer("bitmap_streaming") as timing:
+        for arch in args.archs:
+            result = sweep(arch, smoke=args.smoke,
+                           sparsities=tuple(args.sparsities),
+                           slots_list=tuple(args.slots),
+                           requests=args.requests, rate=args.rate,
+                           max_len=args.max_len, seed=args.seed,
+                           repeats=args.repeats)
+            rows.extend(result["rows"])
+            headlines[arch] = result["headline"]
     if args.out:
-        data = {}
-        if os.path.exists(args.out):
-            with open(args.out) as f:
-                data = json.load(f)
+        data = load_bench(args.out)
         data.pop("headline", None)      # superseded by per-arch headlines
         data["rows"] = rows
         data["headlines"] = headlines
-        with open(args.out, "w") as f:
-            json.dump(data, f, indent=2)
+        data["bitmap_streaming_wall_s"] = timing.wall_s
+        write_atomic(args.out, data)
         print(f"merged {len(rows)} rows + headlines into {args.out}")
 
 

@@ -22,8 +22,11 @@ bench file, preserving the other tools' sections.
 from __future__ import annotations
 
 import argparse
-import json
-import os
+
+try:                                    # script: benchmarks/ on sys.path
+    from _bench_io import bench_timer, merge_section
+except ImportError:                     # package: imported from repo root
+    from benchmarks._bench_io import bench_timer, merge_section
 
 from repro.configs import get_config, get_smoke_config
 from repro.serve import RequestState, ServeEngine, poisson_trace
@@ -122,20 +125,14 @@ def main():
                     help="merge an 'overload' section into this JSON "
                          "file (e.g. BENCH_serve.json)")
     args = ap.parse_args()
-    result = sweep(args.arch, smoke=args.smoke, slots=args.slots,
-                   requests=args.requests, rate=args.rate,
-                   max_len=args.max_len, sparsity=args.sparsity,
-                   slo_ms=args.slo_ms, max_queue=args.max_queue,
-                   seed=args.seed)
+    with bench_timer("overload") as timing:
+        result = sweep(args.arch, smoke=args.smoke, slots=args.slots,
+                       requests=args.requests, rate=args.rate,
+                       max_len=args.max_len, sparsity=args.sparsity,
+                       slo_ms=args.slo_ms, max_queue=args.max_queue,
+                       seed=args.seed)
     if args.out:
-        data = {}
-        if os.path.exists(args.out):
-            with open(args.out) as f:
-                data = json.load(f)
-        data["overload"] = result
-        with open(args.out, "w") as f:
-            json.dump(data, f, indent=2)
-        print(f"merged overload section into {args.out}")
+        merge_section(args.out, "overload", result, wall_s=timing.wall_s)
 
 
 if __name__ == "__main__":

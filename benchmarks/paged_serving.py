@@ -21,8 +21,11 @@ bitmap-streaming sweep writes the base file).
 from __future__ import annotations
 
 import argparse
-import json
-import os
+
+try:                                    # script: benchmarks/ on sys.path
+    from _bench_io import bench_timer, merge_section
+except ImportError:                     # package: imported from repo root
+    from benchmarks._bench_io import bench_timer, merge_section
 
 from repro.configs import get_config, get_smoke_config
 from repro.serve import ServeEngine, poisson_trace
@@ -133,21 +136,15 @@ def main():
                     help="merge a 'paging' section into this JSON file "
                          "(e.g. BENCH_serve.json)")
     args = ap.parse_args()
-    result = sweep(args.arch, smoke=args.smoke,
-                   page_lens=tuple(args.page_lens),
-                   slots_list=tuple(args.slots), requests=args.requests,
-                   rate=args.rate, max_len=args.max_len,
-                   sparsity=args.sparsity, seed=args.seed,
-                   repeats=args.repeats)
+    with bench_timer("paging") as timing:
+        result = sweep(args.arch, smoke=args.smoke,
+                       page_lens=tuple(args.page_lens),
+                       slots_list=tuple(args.slots),
+                       requests=args.requests, rate=args.rate,
+                       max_len=args.max_len, sparsity=args.sparsity,
+                       seed=args.seed, repeats=args.repeats)
     if args.out:
-        data = {}
-        if os.path.exists(args.out):
-            with open(args.out) as f:
-                data = json.load(f)
-        data["paging"] = result
-        with open(args.out, "w") as f:
-            json.dump(data, f, indent=2)
-        print(f"merged paging section into {args.out}")
+        merge_section(args.out, "paging", result, wall_s=timing.wall_s)
 
 
 if __name__ == "__main__":

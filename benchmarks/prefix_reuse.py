@@ -23,8 +23,11 @@ existing bench file without clobbering the paging/prefill/arch sections
 from __future__ import annotations
 
 import argparse
-import json
-import os
+
+try:                                    # script: benchmarks/ on sys.path
+    from _bench_io import bench_timer, merge_section
+except ImportError:                     # package: imported from repo root
+    from benchmarks._bench_io import bench_timer, merge_section
 
 import numpy as np
 
@@ -192,22 +195,18 @@ def main():
                     help="merge a 'prefix_reuse' section into this JSON "
                          "file (e.g. BENCH_serve.json)")
     args = ap.parse_args()
-    result = sweep(args.arch, smoke=args.smoke, slots=args.slots,
-                   requests=args.requests, rate=args.rate,
-                   max_len=args.max_len, sparsity=args.sparsity,
-                   page_len=args.page_len, pool_tokens=args.pool_tokens,
-                   prefill_chunk=args.prefill_chunk,
-                   prefix_len=args.prefix_len, seed=args.seed,
-                   repeats=args.repeats)
+    with bench_timer("prefix_reuse") as timing:
+        result = sweep(args.arch, smoke=args.smoke, slots=args.slots,
+                       requests=args.requests, rate=args.rate,
+                       max_len=args.max_len, sparsity=args.sparsity,
+                       page_len=args.page_len,
+                       pool_tokens=args.pool_tokens,
+                       prefill_chunk=args.prefill_chunk,
+                       prefix_len=args.prefix_len, seed=args.seed,
+                       repeats=args.repeats)
     if args.out:
-        data = {}
-        if os.path.exists(args.out):
-            with open(args.out) as f:
-                data = json.load(f)
-        data["prefix_reuse"] = result
-        with open(args.out, "w") as f:
-            json.dump(data, f, indent=2)
-        print(f"merged prefix_reuse section into {args.out}")
+        merge_section(args.out, "prefix_reuse", result,
+                      wall_s=timing.wall_s)
 
 
 if __name__ == "__main__":

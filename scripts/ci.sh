@@ -44,4 +44,9 @@ echo "== bench smoke: overload goodput / shed rate -> BENCH_serve.json (overload
 PYTHONPATH=src python benchmarks/overload.py --smoke \
     --requests 16 --max-len 48 --out BENCH_serve.json
 
+echo "== telemetry smoke: trace/events/metrics artifacts + on==off token identity =="
+PYTHONPATH=src python scripts/telemetry_smoke.py --arch olmo-1b
+PYTHONPATH=src python scripts/trace_report.py \
+    /tmp/repro_telemetry_smoke/serve.trace.json --validate
+
 echo "CI OK"

@@ -1,0 +1,156 @@
+"""Render a serve-engine Chrome trace as terminal tables.
+
+Reads a ``--trace-out`` artifact (see DESIGN_SERVING.md §Observability)
+and prints:
+
+* a **phase-time breakdown** — per step-phase: span count, total /
+  mean / p95 milliseconds, and the share of the summed step wall each
+  phase accounts for (the software analogue of a per-component access
+  counter readout — where does a serving step's time actually go);
+* a **per-request TTFT waterfall** — one row per request, QUEUED /
+  PREFILL / DECODE segments drawn to a common time axis, with the
+  request's terminal state, token count, and measured TTFT.
+
+Run:
+  PYTHONPATH=src python scripts/trace_report.py serve.trace.json
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Dict, List
+
+from repro.serve.telemetry import PHASES, load_trace, validate_trace
+
+
+def _pctl(sorted_vals: List[float], q: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1, int(round(q * (len(sorted_vals) - 1))))
+    return sorted_vals[idx]
+
+
+def phase_breakdown(events: List[Dict]) -> List[Dict]:
+    """Per-phase aggregate rows (milliseconds), sorted by total time."""
+    steps = [e for e in events
+             if e.get("ph") == "X" and e.get("cat") == "step"]
+    step_wall_ms = sum(e["dur"] for e in steps) / 1e3
+    rows = []
+    for name in PHASES:
+        durs = sorted(e["dur"] / 1e3 for e in events
+                      if e.get("ph") == "X" and e.get("cat") == "phase"
+                      and e["name"] == name)
+        if not durs:
+            continue
+        total = sum(durs)
+        rows.append({
+            "phase": name,
+            "count": len(durs),
+            "total_ms": total,
+            "mean_ms": total / len(durs),
+            "p95_ms": _pctl(durs, 0.95),
+            "share": total / step_wall_ms if step_wall_ms else 0.0,
+        })
+    rows.sort(key=lambda r: -r["total_ms"])
+    return rows
+
+
+def print_phase_table(events: List[Dict]) -> None:
+    rows = phase_breakdown(events)
+    steps = [e for e in events
+             if e.get("ph") == "X" and e.get("cat") == "step"]
+    wall_ms = sum(e["dur"] for e in steps) / 1e3
+    print(f"phase breakdown over {len(steps)} steps "
+          f"({wall_ms:.1f}ms stepped wall):")
+    hdr = (f"  {'phase':<14} {'count':>5} {'total ms':>9} "
+           f"{'mean ms':>8} {'p95 ms':>8} {'share':>6}")
+    print(hdr)
+    print("  " + "-" * (len(hdr) - 2))
+    covered = 0.0
+    for r in rows:
+        covered += r["share"]
+        print(f"  {r['phase']:<14} {r['count']:>5} {r['total_ms']:>9.2f} "
+              f"{r['mean_ms']:>8.3f} {r['p95_ms']:>8.3f} "
+              f"{r['share']:>6.1%}")
+    print(f"  {'(covered)':<14} {'':>5} {'':>9} {'':>8} {'':>8} "
+          f"{covered:>6.1%}")
+
+
+_SEG_CHARS = {"QUEUED": "░", "PREFILL": "▒", "DECODE": "█"}
+
+
+def request_waterfall(events: List[Dict]) -> List[Dict]:
+    """One row per request: lifecycle segments in trace-relative
+    seconds plus the span args (state / tokens / measured TTFT)."""
+    per_rid: Dict[int, Dict] = {}
+    for e in events:
+        if e.get("ph") != "X" or e.get("cat") != "request":
+            continue
+        row = per_rid.setdefault(
+            e["tid"], {"rid": e["tid"], "segments": {}, "args": {}})
+        row["segments"][e["name"]] = (e["ts"] / 1e6,
+                                      (e["ts"] + e["dur"]) / 1e6)
+        row["args"].update(e.get("args") or {})
+    rows = sorted(per_rid.values(),
+                  key=lambda r: min(t0 for t0, _ in
+                                    r["segments"].values()))
+    return rows
+
+
+def print_waterfall(events: List[Dict], width: int = 48) -> None:
+    rows = request_waterfall(events)
+    if not rows:
+        print("no request spans in trace")
+        return
+    t_lo = min(t0 for r in rows for t0, _ in r["segments"].values())
+    t_hi = max(t1 for r in rows for _, t1 in r["segments"].values())
+    span = max(t_hi - t_lo, 1e-9)
+
+    def col(t: float) -> int:
+        return min(width - 1, max(0, int((t - t_lo) / span * width)))
+
+    print(f"request waterfall ({len(rows)} requests, "
+          f"{span * 1e3:.1f}ms window; "
+          f"{'/'.join(f'{c}={n}' for n, c in _SEG_CHARS.items())}):")
+    print(f"  {'rid':>4} {'state':<9} {'tok':>4} {'ttft ms':>8}  timeline")
+    for r in rows:
+        lane = [" "] * width
+        for name in ("QUEUED", "PREFILL", "DECODE"):
+            seg = r["segments"].get(name)
+            if seg is None:
+                continue
+            c0, c1 = col(seg[0]), col(seg[1])
+            for i in range(c0, max(c0 + 1, c1)):
+                lane[i] = _SEG_CHARS[name]
+        a = r["args"]
+        ttft = a.get("first_token_ms")
+        print(f"  {r['rid']:>4} {a.get('state', '?'):<9} "
+              f"{a.get('tokens', 0):>4} "
+              f"{ttft if ttft is not None else '-':>8}  "
+              f"|{''.join(lane)}|")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("trace", help="Chrome trace JSON from --trace-out")
+    ap.add_argument("--width", type=int, default=48,
+                    help="waterfall timeline width in characters")
+    ap.add_argument("--validate", action="store_true",
+                    help="run structural validation (nesting, overlap, "
+                         "lifecycle order) before rendering")
+    args = ap.parse_args()
+    events = load_trace(args.trace)
+    if args.validate:
+        stats = validate_trace(events)
+        cov = stats["agg_coverage"]
+        print(f"trace OK: {stats['steps']} steps, "
+              f"{stats['phase_spans']} phase spans, "
+              f"{stats['requests']} requests"
+              + (f", phase/wall coverage {cov:.1%}"
+                 if cov is not None else ""))
+    print_phase_table(events)
+    print()
+    print_waterfall(events, width=args.width)
+
+
+if __name__ == "__main__":
+    main()

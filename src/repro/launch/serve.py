@@ -70,6 +70,9 @@ def serve_trace(arch: str, smoke: bool = True, slots: int = 4,
                 ttft_budget_ms: float | None = None,
                 max_preempts: int = 8, audit: bool = False,
                 faults: "FaultPlan | None" = None,
+                trace_out: str | None = None,
+                events_out: str | None = None,
+                metrics_out: str | None = None,
                 verbose: bool = True) -> dict:
     """Continuous-batching mode: seeded Poisson arrivals into the engine.
 
@@ -97,6 +100,11 @@ def serve_trace(arch: str, smoke: bool = True, slots: int = 4,
     step-level invariant auditor + packed-tensor integrity scan;
     ``faults`` injects a seeded ``repro.serve.FaultPlan`` (chaos
     testing — see DESIGN_SERVING.md §Failure semantics).
+    ``trace_out`` / ``events_out`` / ``metrics_out`` write the Chrome
+    trace-event JSON (perfetto-viewable step-phase + per-request spans),
+    the structured JSONL event log, and the metrics snapshot (`.prom`
+    for Prometheus text, else JSON) — see DESIGN_SERVING.md
+    §Observability.  All three default off; off is bit-identical.
     """
     eng = ServeEngine.from_arch(arch, smoke=smoke, num_slots=slots,
                                 max_len=max_len, sparsity=sparsity,
@@ -113,7 +121,10 @@ def serve_trace(arch: str, smoke: bool = True, slots: int = 4,
                                 max_queue=max_queue,
                                 ttft_budget_ms=ttft_budget_ms,
                                 max_preempts=max_preempts,
-                                audit=audit, faults=faults)
+                                audit=audit, faults=faults,
+                                trace_out=trace_out,
+                                events_out=events_out,
+                                metrics_out=metrics_out)
     prompt_len = (1, min(4, max_len))
     hi = max(1, min(max_new[1], max_len - prompt_len[1] + 1))
     lo = max(1, min(max_new[0], hi))
@@ -130,6 +141,9 @@ def serve_trace(arch: str, smoke: bool = True, slots: int = 4,
                 # feature, not a failure; count it and keep the trace going
                 shed_at_submit += 1
         rep = eng.run()
+    for path in eng.close():
+        if verbose:
+            print(f"telemetry written: {path}")
     if verbose:
         ws = rep["weight_stream"]
         print(f"weight stream: {ws['packed_tensors']} tensors packed, "
@@ -277,6 +291,17 @@ def main():
                     help="inject a seeded FaultPlan.chaos() fault schedule "
                          "(page squeezes, forced preempts, eviction "
                          "storms, NaN logits, bitflips); implies --audit")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome trace-event JSON (step-phase + "
+                         "per-request spans; open in ui.perfetto.dev or "
+                         "chrome://tracing)")
+    ap.add_argument("--events-out", default=None,
+                    help="write the structured JSONL event log "
+                         "(lifecycle transitions, fallbacks, faults, "
+                         "audit violations)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write a metrics snapshot at exit: Prometheus "
+                         "text if the path ends in .prom, else JSON")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -296,6 +321,8 @@ def main():
                 ttft_budget_ms=args.ttft_budget_ms,
                 max_preempts=args.max_preempts,
                 audit=args.audit or faults is not None, faults=faults,
+                trace_out=args.trace_out, events_out=args.events_out,
+                metrics_out=args.metrics_out,
                 seed=args.seed, model_parallel=args.model_parallel)
 
 

@@ -14,14 +14,21 @@ from repro.serve.prefill import PrefillJob, PrefillPlanner
 from repro.serve.request import (Request, RequestRejected, RequestState,
                                  TERMINAL_STATES)
 from repro.serve.scheduler import SlotScheduler
+from repro.serve.telemetry import (ChromeTrace, Clock, Counter, EventLog,
+                                   Gauge, Histogram, MetricsRegistry,
+                                   StepSpans, Telemetry, load_trace,
+                                   validate_events, validate_trace)
 from repro.serve.trace import RollingStat, percentiles, poisson_trace
 
 __all__ = [
-    "AuditViolation", "DeadlineExceeded", "Fault", "FaultPlan",
-    "InvariantAuditor", "OutOfPages", "PackEntry", "PackedModel",
-    "PagePool", "PagedKVCache", "PrefillJob", "PrefillPlanner",
-    "PrefixBlock", "Request", "RequestRejected", "RequestState",
-    "RollingStat", "ServeEngine", "ServeError", "ServeOverloaded",
-    "SlotKVCache", "SlotScheduler", "TERMINAL_STATES", "choose_block",
+    "AuditViolation", "ChromeTrace", "Clock", "Counter",
+    "DeadlineExceeded", "EventLog", "Fault", "FaultPlan", "Gauge",
+    "Histogram", "InvariantAuditor", "MetricsRegistry", "OutOfPages",
+    "PackEntry", "PackedModel", "PagePool", "PagedKVCache", "PrefillJob",
+    "PrefillPlanner", "PrefixBlock", "Request", "RequestRejected",
+    "RequestState", "RollingStat", "ServeEngine", "ServeError",
+    "ServeOverloaded", "SlotKVCache", "SlotScheduler", "StepSpans",
+    "TERMINAL_STATES", "Telemetry", "choose_block", "load_trace",
     "pack_lm_head", "pack_model", "percentiles", "poisson_trace",
+    "validate_events", "validate_trace",
 ]

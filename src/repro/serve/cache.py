@@ -41,6 +41,11 @@ class SlotKVCache:
         self.cache = self._reset(self.cache, jnp.int32(slot))
         self.resets += 1
 
+    def register_metrics(self, reg) -> None:
+        """Expose the contiguous cache's counters as registry gauges."""
+        reg.gauge("kv.resets", lambda: self.resets)
+        reg.gauge("kv.reserved_bytes", self.reserved_kv_bytes)
+
     def reserved_kv_bytes(self) -> int:
         """Bytes reserved for attention KV lines — the worst-case
         ``num_slots × capacity`` contiguous reservation the paged layout

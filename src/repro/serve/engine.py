@@ -80,7 +80,7 @@ from repro.serve.paging import OutOfPages, PagedKVCache
 from repro.serve.prefill import PrefillPlanner
 from repro.serve.request import Request, RequestState
 from repro.serve.scheduler import SlotScheduler
-from repro.serve.trace import RollingStat
+from repro.serve.telemetry import Clock, MetricsRegistry, Telemetry
 from repro.sparse.format import BitmapWeight, pack_bitmap
 from repro.sparse.pruning import global_l1_prune, per_tensor_prune, \
     sparsity_of
@@ -122,7 +122,10 @@ class ServeEngine:
                  max_queue: Optional[int] = None,
                  ttft_budget_ms: Optional[float] = None,
                  max_preempts: int = 8, audit: bool = False,
-                 faults: Optional[FaultPlan] = None):
+                 faults: Optional[FaultPlan] = None,
+                 trace_out: Optional[str] = None,
+                 events_out: Optional[str] = None,
+                 metrics_out: Optional[str] = None):
         """``head_sparsity``: ``global_l1_prune`` deliberately keeps
         (tied) embeddings dense, so the LM head is additionally pruned
         per-tensor to this level before packing — that is what gives the
@@ -221,8 +224,35 @@ class ServeEngine:
         chaos harness.  Injected faults are deterministic and (under
         ``audit=True``) recoverable: served tokens stay bit-identical
         to a fault-free run.
+
+        ``trace_out`` / ``events_out`` / ``metrics_out``: telemetry
+        artifacts (``repro.serve.telemetry``), written by ``close()``.
+        Setting any of them turns step-phase spans on: Chrome
+        trace-event JSON with per-step phase + per-request lifecycle
+        spans, a structured JSONL event log, and a metrics-registry
+        snapshot (JSON, or Prometheus text for ``.prom`` paths).  All
+        three default off — telemetry-off serving is bit-identical and
+        allocation-free on the hot path (spans and events are plain
+        ``is not None`` checks; the metrics registry itself is always
+        on, since ``report()`` is rendered from it).
         """
         self.cfg = cfg
+        self.metrics = MetricsRegistry()
+        self._clock = Clock()
+        self._steps = 0
+        # telemetry first: init-time fallback warnings below emit into
+        # the event log, so spans/events must exist before any
+        # _warn_fallback can fire
+        self.telemetry: Optional[Telemetry] = None
+        if trace_out or events_out or metrics_out:
+            self.telemetry = Telemetry(self.metrics, self._clock,
+                                       trace_out=trace_out,
+                                       events_out=events_out,
+                                       metrics_out=metrics_out)
+        self.spans = (self.telemetry.spans
+                      if self.telemetry is not None else None)
+        self.events = (self.telemetry.events
+                       if self.telemetry is not None else None)
         self.num_slots = num_slots
         self.max_len = max_len
         self.sparsity = sparsity
@@ -402,8 +432,13 @@ class ServeEngine:
         self._jit_prefill = (
             jax.jit(build_prefill_step(cfg, impl=impl),
                     donate_argnums=(1,)) if prefill_chunk else None)
-        self._prefill_steps = 0
-        self._decode_steps = 0
+        # engine-owned accounting lives in the metrics registry — the
+        # report sections below are rendered views over these metrics
+        m = self.metrics
+        self._c_prefill_steps = m.counter(
+            "steps.prefill", help="engine steps that ran a prefill call")
+        self._c_decode_steps = m.counter(
+            "steps.decode", help="engine steps that ran a decode call")
 
         self._tok = np.zeros(num_slots, np.int32)
         self._pos = np.zeros(num_slots, np.int32)
@@ -425,8 +460,9 @@ class ServeEngine:
         self._keys = np.zeros((num_slots, 2), np.uint32)
         self._seed = seed
         self._warm = False
-        self._steps = 0
-        self._active_slot_steps = 0     # occupancy accounting
+        self._c_slot_steps = m.counter(
+            "steps.active_slots",
+            help="decoding slot-steps (occupancy numerator)")
         self._next_rid = 0
         # per-slot ingest = prompt + tokens generated before a preemption
         # — the teacher-forcing/prefill source, so a recomputed request
@@ -434,21 +470,34 @@ class ServeEngine:
         self._ingest: Dict[int, List[int]] = {}
         self._admit_seq = np.zeros(num_slots, np.int64)  # preempt order
         self._admit_counter = 0
-        self._recomputed_tokens = 0
+        self._c_recomputed = m.counter(
+            "tokens.recomputed",
+            help="positions re-ingested after preemption")
         # bounded retained history + streaming aggregates: report() reads
-        # these instead of rescanning every request ever submitted
+        # these instead of rescanning every request ever submitted (the
+        # registry histograms keep the seeded RollingStat reservoirs)
         self.history = history
         self.requests: deque = deque(maxlen=max(1, history))
-        self._done_count = 0
-        self._gen_tokens = 0
-        self._lat_stat = RollingStat(seed=1)
-        self._ftl_stat = RollingStat(seed=2)
-        self._queue_stat = RollingStat(seed=3)
-        self._prefill_stat = RollingStat(seed=4)
-        self._fdec_stat = RollingStat(seed=5)
-        self._ftl_hit = RollingStat(seed=6)
-        self._ftl_miss = RollingStat(seed=7)
-        self._t0: Optional[float] = None
+        self._c_done = m.counter("requests.done",
+                                 help="requests retired DONE")
+        self._c_gen_tokens = m.counter("tokens.generated",
+                                       help="tokens delivered by DONE "
+                                            "requests")
+        self._h_lat = m.histogram("request.latency_s", seed=1,
+                                  help="arrival-due -> last token")
+        self._h_ftl = m.histogram("request.first_token_s", seed=2,
+                                  help="arrival-due -> first token")
+        self._h_queue = m.histogram("request.queue_s", seed=3,
+                                    help="arrival-due -> slot granted")
+        self._h_prefill = m.histogram("request.prefill_s", seed=4,
+                                      help="slot granted -> prompt "
+                                           "cache resident")
+        self._h_fdec = m.histogram("request.first_decode_s", seed=5,
+                                   help="prompt resident -> first token")
+        self._h_ftl_hit = m.histogram("request.ttft_hit_s", seed=6,
+                                      help="TTFT, prefix-cache hits")
+        self._h_ftl_miss = m.histogram("request.ttft_miss_s", seed=7,
+                                       help="TTFT, prefix-cache misses")
 
         # ---- lifecycle hardening: deadlines, shedding, bounded
         # preemption, fault injection + invariant auditing ----
@@ -457,11 +506,13 @@ class ServeEngine:
         self.ttft_budget_ms = ttft_budget_ms
         self.max_preempts = max_preempts
         self._has_deadlines = deadline_ms is not None
-        self._cancelled = 0
-        self._expired = 0
-        self._shed = 0
-        self._forced_preempts = 0
-        self._wasted_tokens = 0    # tokens generated by aborted requests
+        self._c_cancelled = m.counter("requests.cancelled")
+        self._c_expired = m.counter("requests.expired")
+        self._c_shed = m.counter("requests.shed")
+        self._c_forced_preempts = m.counter(
+            "preempts.forced", help="fault-injected forced preemptions")
+        self._c_wasted = m.counter(
+            "tokens.wasted", help="tokens generated by aborted requests")
         self._step_wall_ema: Optional[float] = None  # TTFT estimator
         self.quarantined: Dict[str, str] = {}
         self.faults = faults
@@ -470,6 +521,25 @@ class ServeEngine:
         # auditor's integrity scans compare against this pristine state
         self.auditor: Optional[InvariantAuditor] = (
             InvariantAuditor(self) if audit else None)
+
+        # ---- telemetry: every subsystem registers into the one
+        # registry; spans/events only exist when an output is asked for
+        # (telemetry-off keeps the hot path allocation-free) ----
+        self.scheduler.register_metrics(m)
+        self.kv.register_metrics(m)
+        if self.planner is not None:
+            self.planner.register_metrics(m)
+        if self.packed is not None:
+            self.packed.register_metrics(m)
+        if self.faults is not None:
+            self.faults.register_metrics(m)
+        if self.auditor is not None:
+            self.auditor.register_metrics(m)
+        m.gauge("steps.total", lambda: self._steps,
+                help="engine steps taken (includes idle fast-forward)")
+        m.gauge("queue.due_depth", self._due_depth,
+                help="waiting requests whose arrival has come due")
+        self._register_report_views()
 
     @classmethod
     def from_arch(cls, arch: str, smoke: bool = True, **kw) -> "ServeEngine":
@@ -485,7 +555,75 @@ class ServeEngine:
         msg = message or f"{key} fell back: {reason}"
         if (key, reason) not in self._warned:
             self._warned.add((key, reason))
+            self._emit("fallback", key=key, reason=reason)
             warnings.warn(msg, stacklevel=3)
+
+    # --------------------------------------------------------- telemetry ----
+
+    @property
+    def _forced_preempts(self) -> int:
+        """Fault-injected forced-preemption count (registry counter)."""
+        return self._c_forced_preempts.value
+
+    def _emit(self, kind: str, rid: Optional[int] = None,
+              **fields) -> None:
+        """Append to the structured event log (no-op when telemetry is
+        off — a single ``is None`` check, nothing allocated)."""
+        if self.events is not None:
+            self.events.emit(kind, t=self._clock.now_or_zero(),
+                             step=self._steps, rid=rid, **fields)
+
+    def close(self) -> List[str]:
+        """Write the configured telemetry artifacts (``--trace-out`` /
+        ``--events-out`` / ``--metrics-out``); idempotent, returns the
+        paths written.  A telemetry-off engine returns []."""
+        if self.telemetry is None:
+            return []
+        return self.telemetry.close()
+
+    def _register_report_views(self) -> None:
+        """Register ``report()``'s top-level fields and sections as
+        registry views, in the legacy key order — ``report()`` is then
+        a rendered snapshot of the registry and nothing else.  Field
+        names and types are pinned by the schema snapshot test."""
+        m = self.metrics
+        m.view("requests", lambda: self._c_done.value)
+        m.view("retained_requests", lambda: len(self.requests))
+        m.view("generated_tokens", lambda: self._c_gen_tokens.value)
+        m.view("steps", lambda: self._steps)
+        m.view("wall_s", lambda: (self._clock.now()
+                                  if self._clock.started else 0.0))
+
+        def tok_per_s():
+            dt = self._clock.now() if self._clock.started else 0.0
+            gen = self._c_gen_tokens.value
+            return gen / dt if dt > 0 else float("nan")
+
+        m.view("tok_per_s", tok_per_s)
+        m.view("latency_s", self._h_lat.percentiles)
+        m.view("first_token_s", self._h_ftl.percentiles)
+        # TTFT decomposition: queueing (no slot), prompt ingestion
+        # (chunked prefill calls or the legacy teacher-forced walk),
+        # and the first real decode step — first_token_s is their sum
+        m.view("ttft", lambda: {
+            "queue_s": self._h_queue.percentiles(),
+            "prefill_s": self._h_prefill.percentiles(),
+            "first_decode_s": self._h_fdec.percentiles(),
+        })
+        m.view("prefill", self.prefill_report)
+        m.view("prefix_reuse", self.prefix_reuse_report)
+        m.view("slot_occupancy",
+               lambda: (self._c_slot_steps.value
+                        / (self._steps * self.num_slots)
+                        if self._steps else 0.0))
+        m.view("weight_sparsity", lambda: self.weight_sparsity)
+        m.view("head_compression", lambda: self.head_compression)
+        m.view("head_fallback", lambda: self.head_fallback)
+        m.view("weight_stream", self.weight_stream_report)
+        m.view("paging", self.paging_report)
+        m.view("cache_resets", lambda: self.kv.resets)
+        m.view("lifecycle", self.lifecycle_report)
+        m.view("fallbacks", lambda: dict(self.fallbacks))
 
     # ------------------------------------------------------------ intake ----
 
@@ -532,7 +670,8 @@ class ServeEngine:
         if arrival <= self._steps:
             reason = self._overload_reason()
             if reason is not None:
-                self._shed += 1
+                self._c_shed.inc()
+                self._emit("shed", reason=reason, at="submit")
                 raise ServeOverloaded(
                     reason, queue_depth=self._due_depth(),
                     est_ttft_s=self.estimated_ttft_s())
@@ -552,6 +691,8 @@ class ServeEngine:
         # bounded ``requests`` history only receives it when done (the
         # old append-on-submit list grew with total traffic forever)
         self.scheduler.submit(req)
+        self._emit("submit", rid=req.rid, prompt_tokens=len(prompt),
+                   max_new_tokens=max_new_tokens, arrival=arrival)
         return req
 
     # -------------------------------------------------------- lifecycle ----
@@ -596,16 +737,21 @@ class ServeEngine:
         """Terminal bookkeeping for the non-DONE outcomes."""
         req.error = error
         req.done_step = self._steps
-        if self._t0 is not None:
+        if self._clock.started:
             req.t_done = self._wall()
         if state is RequestState.CANCELLED:
-            self._cancelled += 1
+            self._c_cancelled.inc()
         elif state is RequestState.EXPIRED:
-            self._expired += 1
+            self._c_expired.inc()
         elif state is RequestState.SHED:
-            self._shed += 1
-        self._wasted_tokens += len(req.tokens)
+            self._c_shed.inc()
+        self._c_wasted.inc(len(req.tokens))
         self.requests.append(req)
+        self._emit(state.name.lower(), rid=req.rid,
+                   tokens=len(req.tokens),
+                   reason=str(error) if error is not None else None)
+        if self.telemetry is not None:
+            self.telemetry.request_done(req)
 
     def _due_depth(self) -> int:
         """Waiting requests whose arrival has come due."""
@@ -661,7 +807,7 @@ class ServeEngine:
     # ------------------------------------------------------------- loop ----
 
     def _wall(self) -> float:
-        return time.perf_counter() - self._t0
+        return self._clock.now()
 
     def _commit_tokens(self, req: Request) -> int:
         """Pages to commit at admission, in tokens.  Strict mode commits
@@ -713,6 +859,8 @@ class ServeEngine:
         stream is token-identical to the undisturbed one."""
         req = self.scheduler.active[slot]
         req.t_preempt.append(self._wall())
+        self._emit("preempt", rid=req.rid, slot=slot,
+                   tokens=len(req.tokens))
         if self.planner is not None:
             self.planner.cancel(slot)
         self.scheduler.requeue(slot)
@@ -726,16 +874,20 @@ class ServeEngine:
     def _retire(self, req: Request) -> None:
         """Fold the finished request into the streaming aggregates and
         the bounded retained history — report() never rescans."""
-        self._done_count += 1
-        self._gen_tokens += len(req.tokens)
-        self._lat_stat.add(req.latency_s)
-        self._ftl_stat.add(req.first_token_s)
-        self._queue_stat.add(req.queue_s)
-        self._prefill_stat.add(req.prefill_s)
-        self._fdec_stat.add(req.first_decode_s)
-        (self._ftl_hit if req.prefix_hit_tokens > 0
-         else self._ftl_miss).add(req.first_token_s)
+        self._c_done.inc()
+        self._c_gen_tokens.inc(len(req.tokens))
+        self._h_lat.observe(req.latency_s)
+        self._h_ftl.observe(req.first_token_s)
+        self._h_queue.observe(req.queue_s)
+        self._h_prefill.observe(req.prefill_s)
+        self._h_fdec.observe(req.first_decode_s)
+        (self._h_ftl_hit if req.prefix_hit_tokens > 0
+         else self._h_ftl_miss).observe(req.first_token_s)
         self.requests.append(req)
+        self._emit("done", rid=req.rid, tokens=len(req.tokens),
+                   latency_s=req.latency_s)
+        if self.telemetry is not None:
+            self.telemetry.request_done(req)
 
     def _recover_corruption(self, logits, decoding: List[int]) -> bool:
         """Integrity scan + quarantine + deterministic replay (the
@@ -780,6 +932,7 @@ class ServeEngine:
                     f"corrupted value/bitmap payload detected")
             self.quarantined[path] = reason
             self.auditor.drop(path)
+            self._emit("quarantine", tensor=path, reason=reason)
         if self.page_len:
             self.kv.flush_prefix()
         for slot in list(self.scheduler.active):
@@ -861,13 +1014,14 @@ class ServeEngine:
             self._tok[slot] = ing[-1]
             if req.t_prefill_done is None:
                 req.t_prefill_done = wall
+                self._emit("prefill_done", rid=req.rid, slot=slot)
         for slot in np.nonzero(lens)[0]:
             if self.planner.in_prefill(int(slot)):
                 # park the passenger's decode write on the next unwritten
                 # prompt position: the next chunk rewrites that line
                 # before anything reads it
                 self._pos[slot] = self.planner.next_pos(int(slot))
-        self._prefill_steps += 1
+        self._c_prefill_steps.inc()
 
     def warmup(self) -> None:
         """Compile the decode step + slot reset before the latency clock
@@ -908,14 +1062,36 @@ class ServeEngine:
     def step(self) -> None:
         """One engine step: admit, at most one batched prefill call, then
         the full-batch decode step (skipped only when every active slot
-        is mid-prefill)."""
+        is mid-prefill).
+
+        With telemetry on, every host-side stretch of this method sits
+        inside exactly one phase span (``telemetry.PHASES``): schedule →
+        [prefill] → [page_ensure → decode → host_sync → sample] →
+        [deadline_sweep] → [audit].  Spans bracket host code only — the
+        decode phase ends at dispatch, and device time surfaces in
+        ``host_sync`` (the existing block-until-ready point) — so the
+        per-step phase sum accounts for the step wall without adding
+        transfers or syncs.  Telemetry off: ``sp is None`` and every
+        bracket is a dead branch."""
         self.warmup()
-        if self._t0 is None:
-            self._t0 = time.perf_counter()
+        # the serving clock starts *after* warmup — one idempotent
+        # helper (telemetry.Clock), so no call path can leak compile
+        # time into the first timed step
+        self._clock.start()
+        sp = self.spans
         t_begin = time.perf_counter()
+        if sp is not None:
+            sp.step_begin(self._steps, t_begin)
+            sp.begin("schedule")
         now = float(self._steps)
         if self.faults is not None:
+            n_log = len(self.faults.log)
             self.faults.fire(self, self._steps)
+            if self.events is not None:
+                for entry in list(self.faults.log)[n_log:]:
+                    self._emit("fault", kind_detail=entry.get("kind"),
+                               fired=bool(entry.get("fired")),
+                               tensor=entry.get("tensor"))
         shedding = (self.max_queue is not None
                     or self.ttft_budget_ms is not None)
         for r in list(self.scheduler.waiting):
@@ -973,7 +1149,7 @@ class ServeEngine:
                 # (adopted blocks — often this request's own earlier
                 # registrations — shrink it)
                 req.recomputed_tokens += max(0, len(ing) - 1 - shared)
-                self._recomputed_tokens += max(0, len(ing) - 1 - shared)
+                self._c_recomputed.inc(max(0, len(ing) - 1 - shared))
             self._pos[slot] = shared
             self._tok[slot] = ing[shared]
             self._temp[slot] = req.temperature
@@ -993,13 +1169,21 @@ class ServeEngine:
                 # nothing left to ingest — single-token prompt, or a full
                 # prefix hit: TTFT collapses to queue + first-decode
                 req.t_prefill_done = req.t_admit
+            self._emit("admit", rid=req.rid, slot=slot,
+                       prefix_hit_tokens=shared)
+        if sp is not None:
+            sp.end()
 
         # at most one prefill call per engine step: a stream of long
         # prompts interleaves chunk calls with decode steps instead of
         # starving the decoding slots
         prefilled = False
         if self.planner is not None and self.planner.has_work:
+            if sp is not None:
+                sp.begin("prefill")
             self._prefill_call()
+            if sp is not None:
+                sp.end()
             prefilled = True
 
         in_prefill = (self.planner.in_prefill if self.planner is not None
@@ -1012,6 +1196,8 @@ class ServeEngine:
                 # page (or an unwritten line their next chunk rewrites).
                 # Oldest first: in preemptible mode a dry pool preempts
                 # the youngest slots, which haven't mapped yet
+                if sp is not None:
+                    sp.begin("page_ensure")
                 for slot in sorted(decoding,
                                    key=lambda s: int(self._admit_seq[s])):
                     if slot not in self.scheduler.active:
@@ -1021,12 +1207,23 @@ class ServeEngine:
                             s, int(self._pos[s])), slot)
                 decoding = [s for s in self.scheduler.active
                             if not in_prefill(s)]
+                if sp is not None:
+                    sp.end()
+            if sp is not None:
+                sp.begin("decode")
             nxt, logits, cache = self._decode(
                 jnp.asarray(self._tok[:, None]), jnp.asarray(self._pos))
             self.kv.cache = cache
+            if sp is not None:
+                sp.end()
+                sp.begin("host_sync")
             nxt_host = np.asarray(nxt)
+            if sp is not None:
+                sp.end()
             wall = self._wall()
 
+            if sp is not None:
+                sp.begin("sample")
             if self.audit and self._recover_corruption(logits, decoding):
                 # a corrupted tensor was quarantined and every active
                 # slot preempted: nothing from this step is committed —
@@ -1035,7 +1232,7 @@ class ServeEngine:
                 # the uncorrupted step would have
                 pass
             else:
-                self._active_slot_steps += len(decoding)
+                self._c_slot_steps.inc(len(decoding))
                 for slot, req in list(self.scheduler.active.items()):
                     if in_prefill(slot):
                         continue
@@ -1058,12 +1255,17 @@ class ServeEngine:
                         if (p + 1 == len(ing) - 1
                                 and req.t_prefill_done is None):
                             req.t_prefill_done = wall  # cache resident
+                            self._emit("prefill_done", rid=req.rid,
+                                       slot=slot)
                         continue
                     t = int(nxt_host[slot])
                     req.tokens.append(t)
                     ing.append(t)
                     if req.t_first is None:
                         req.t_first = wall
+                        if self.events is not None:
+                            self._emit("first_token", rid=req.rid,
+                                       slot=slot)
                     self._tok[slot] = t
                     if (len(req.tokens) >= req.max_new_tokens
                             or p + 1 >= self.max_len):
@@ -1071,12 +1273,20 @@ class ServeEngine:
                         req.done_step = self._steps
                         self._release_slot(slot, RequestState.DONE)
                         self._retire(req)
-            self._decode_steps += 1
+            if sp is not None:
+                sp.end()
+            self._c_decode_steps.inc()
         elif self.audit:
             # prefill-only step: no logits to check, but a fault may
             # have corrupted tensors the prefill call just consumed
+            if sp is not None:
+                sp.begin("audit")
             self._recover_corruption(None, [])
+            if sp is not None:
+                sp.end()
         if self._has_deadlines:
+            if sp is not None:
+                sp.begin("deadline_sweep")
             wall = self._wall()
             for slot in list(self.scheduler.active):
                 req = self.scheduler.active[slot]
@@ -1087,9 +1297,21 @@ class ServeEngine:
                                     f"rid {req.rid}: exceeded its "
                                     f"{req.deadline_ms:.0f}ms deadline "
                                     f"mid-flight"))
+            if sp is not None:
+                sp.end()
         if self.auditor is not None:
-            self.auditor.check_step()
+            if sp is not None:
+                sp.begin("audit")
+            try:
+                self.auditor.check_step()
+            except Exception as e:
+                self._emit("audit_violation", reason=str(e))
+                raise
+            if sp is not None:
+                sp.end()
         dt = time.perf_counter() - t_begin
+        if sp is not None:
+            sp.step_end()
         self._step_wall_ema = (dt if self._step_wall_ema is None
                                else 0.8 * self._step_wall_ema + 0.2 * dt)
         self._steps += 1
@@ -1097,8 +1319,7 @@ class ServeEngine:
     def run(self) -> dict:
         """Drive until every submitted request has drained; report stats."""
         self.warmup()
-        if self._t0 is None:
-            self._t0 = time.perf_counter()
+        self._clock.start()
         while self.scheduler.has_work:
             if not self.scheduler.active:
                 # idle: fast-forward the step clock to the next arrival
@@ -1163,8 +1384,8 @@ class ServeEngine:
         """The prefill section: chunk-call accounting + the step split."""
         rep = {"enabled": self.prefill_chunk > 0,
                "fallback": self.prefill_fallback,
-               "prefill_steps": self._prefill_steps,
-               "decode_steps": self._decode_steps}
+               "prefill_steps": self._c_prefill_steps.value,
+               "decode_steps": self._c_decode_steps.value}
         if self.planner is not None:
             rep.update(self.planner.report())
         else:
@@ -1179,15 +1400,15 @@ class ServeEngine:
         rep = {
             "enabled": self.prefix_reuse,
             "fallback": self.prefix_fallback,
-            "ttft_hit_s": self._ftl_hit.percentiles(),
-            "ttft_miss_s": self._ftl_miss.percentiles(),
-            "hit_requests": self._ftl_hit.count,
-            "miss_requests": self._ftl_miss.count,
+            "ttft_hit_s": self._h_ftl_hit.percentiles(),
+            "ttft_miss_s": self._h_ftl_miss.percentiles(),
+            "hit_requests": self._h_ftl_hit.count,
+            "miss_requests": self._h_ftl_miss.count,
             "preempt": {
                 "enabled": self.preempt,
                 "fallback": self.preempt_fallback,
                 "count": self.scheduler.preemptions,
-                "recomputed_tokens": self._recomputed_tokens,
+                "recomputed_tokens": self._c_recomputed.value,
             },
         }
         if self.page_len:
@@ -1210,11 +1431,11 @@ class ServeEngine:
             "max_queue": self.max_queue,
             "ttft_budget_ms": self.ttft_budget_ms,
             "max_preempts": self.max_preempts,
-            "cancelled": self._cancelled,
-            "expired": self._expired,
-            "shed": self._shed,
+            "cancelled": self._c_cancelled.value,
+            "expired": self._c_expired.value,
+            "shed": self._c_shed.value,
             "forced_preempts": self._forced_preempts,
-            "wasted_tokens": self._wasted_tokens,
+            "wasted_tokens": self._c_wasted.value,
             "estimated_ttft_s": self.estimated_ttft_s(),
             "terminal_states": by_state,
             "quarantined": dict(self.quarantined),
@@ -1225,54 +1446,24 @@ class ServeEngine:
             rep["audit"] = self.auditor.report()
         return rep
 
-    def report(self) -> dict:
-        dt = self._wall() if self._t0 is not None else 0.0
-        gen = self._gen_tokens
-        # streaming aggregates folded in at retire time: identical to
-        # the old full-rescan on short traces (the RollingStat reservoir
-        # is exact up to its cap), O(history) instead of O(traffic)
-        lat = self._lat_stat.percentiles()
-        ftl = self._ftl_stat.percentiles()
-        # TTFT decomposition: queueing (no slot), prompt ingestion
-        # (chunked prefill calls or the legacy teacher-forced walk), and
-        # the first real decode step — first_token_s is their sum, no
-        # longer conflating prompt-walk time with queueing
-        ttft = {
-            "queue_s": self._queue_stat.percentiles(),
-            "prefill_s": self._prefill_stat.percentiles(),
-            "first_decode_s": self._fdec_stat.percentiles(),
-        }
-        occ = (self._active_slot_steps / (self._steps * self.num_slots)
-               if self._steps else 0.0)
+    def paging_report(self) -> dict:
+        """The paging section: pool accounting under paged KV, or the
+        contiguous-reservation equivalent when paging fell back."""
         if self.page_len:
             positions = [int(self._pos[s]) for s in self.scheduler.active]
-            paging = {"paged": True, "fallback": None,
-                      **self.kv.report(positions)}
-        else:
-            reserved = self.kv.reserved_kv_bytes()
-            paging = {"paged": False, "fallback": self.paging_fallback,
-                      "reserved_kv_bytes": reserved,
-                      "contiguous_kv_bytes": reserved,
-                      "reserved_reduction": 1.0}
-        return {
-            "requests": self._done_count,
-            "retained_requests": len(self.requests),
-            "generated_tokens": gen,
-            "steps": self._steps,
-            "wall_s": dt,
-            "tok_per_s": gen / dt if dt > 0 else float("nan"),
-            "latency_s": lat,
-            "first_token_s": ftl,
-            "ttft": ttft,
-            "prefill": self.prefill_report(),
-            "prefix_reuse": self.prefix_reuse_report(),
-            "slot_occupancy": occ,
-            "weight_sparsity": self.weight_sparsity,
-            "head_compression": self.head_compression,
-            "head_fallback": self.head_fallback,
-            "weight_stream": self.weight_stream_report(),
-            "paging": paging,
-            "cache_resets": self.kv.resets,
-            "lifecycle": self.lifecycle_report(),
-            "fallbacks": dict(self.fallbacks),
-        }
+            return {"paged": True, "fallback": None,
+                    **self.kv.report(positions)}
+        reserved = self.kv.reserved_kv_bytes()
+        return {"paged": False, "fallback": self.paging_fallback,
+                "reserved_kv_bytes": reserved,
+                "contiguous_kv_bytes": reserved,
+                "reserved_reduction": 1.0}
+
+    def report(self) -> dict:
+        """A rendered snapshot of the metrics registry — every section
+        is a registered view, every scalar a registered metric, so the
+        same registry also exports Prometheus text and the JSON
+        snapshot (``--metrics-out``) without a second bookkeeping
+        path.  Key order and field types match the pre-registry
+        report() exactly (pinned by the schema snapshot test)."""
+        return self.metrics.render()

@@ -172,7 +172,7 @@ class FaultPlan:
                 break
             victim = max(victims, key=lambda s: engine._admit_seq[s])
             engine._preempt_slot(victim)
-            engine._forced_preempts += 1
+            engine._c_forced_preempts.inc()
             fired += 1
         if fired:
             self.log.append({"step": step, "kind": f.kind, "fired": True,
@@ -235,6 +235,14 @@ class FaultPlan:
                          "tensor": path, "field": f.field, "bit": bit})
 
     # --------------------------------------------------------- report ----
+
+    def register_metrics(self, reg) -> None:
+        """Expose the plan's firing counts as registry gauges."""
+        reg.gauge("faults.planned", lambda: len(self.faults))
+        reg.gauge("faults.fired",
+                  lambda: sum(1 for e in self.log if e.get("fired")))
+        reg.gauge("faults.skipped",
+                  lambda: sum(1 for e in self.log if not e.get("fired")))
 
     def summary(self) -> Dict:
         fired = [e for e in self.log if e.get("fired")]
@@ -337,6 +345,11 @@ class InvariantAuditor:
             raise AuditViolation(
                 "non-finite logits with no corrupted packed tensor to "
                 "quarantine (rows %s)" % rows)
+
+    def register_metrics(self, reg) -> None:
+        reg.gauge("audit.steps_checked", lambda: self.steps_checked)
+        reg.gauge("audit.integrity_scans", lambda: self.integrity_scans)
+        reg.gauge("audit.checksummed_tensors", lambda: len(self._sums))
 
     def report(self) -> Dict:
         return {"enabled": True, "steps_checked": self.steps_checked,

@@ -183,6 +183,12 @@ class PackedModel:
                 e.sparse_bytes = e.dense_bytes
         return True
 
+    def register_metrics(self, reg) -> None:
+        reg.gauge("stream.packed_tensors",
+                  lambda: len(self.packed_entries))
+        reg.gauge("stream.fallback_tensors",
+                  lambda: len(self.fallback_entries))
+
     def stream_report(self, activated_experts: Optional[int] = None) -> Dict:
         """Modeled per-step weight-HBM bytes across the stack (no head —
         the engine adds its head term on top).

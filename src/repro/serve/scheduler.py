@@ -99,6 +99,15 @@ class SlotScheduler:
 
     # ------------------------------------------------------------ views ----
 
+    def register_metrics(self, reg) -> None:
+        """Expose slot occupancy and admission counters as gauges."""
+        reg.gauge("scheduler.waiting", lambda: len(self.waiting))
+        reg.gauge("scheduler.active", lambda: len(self.active))
+        reg.gauge("scheduler.free_slots", lambda: len(self.free))
+        reg.gauge("scheduler.admitted_total",
+                  lambda: self.admitted_total)
+        reg.gauge("scheduler.preemptions", lambda: self.preemptions)
+
     @property
     def admitted_rids(self) -> List[int]:
         """Admission order, most recent ``history`` entries (for tests)."""
