@@ -9,10 +9,15 @@ and prints:
   counter readout — where does a serving step's time actually go);
 * a **per-request TTFT waterfall** — one row per request, QUEUED /
   PREFILL / DECODE segments drawn to a common time axis, with the
-  request's terminal state, token count, and measured TTFT.
+  request's terminal state, token count, and measured TTFT;
+* with ``--traffic``, a **per-phase HBM counter view** — the
+  ``hbm.decode`` / ``hbm.prefill`` counter tracks the traffic ledger
+  emitted into the trace: per series, sample count and total / mean /
+  max bytes per step.
 
 Run:
   PYTHONPATH=src python scripts/trace_report.py serve.trace.json
+  PYTHONPATH=src python scripts/trace_report.py serve.trace.json --traffic
 """
 from __future__ import annotations
 
@@ -73,6 +78,46 @@ def print_phase_table(events: List[Dict]) -> None:
               f"{r['share']:>6.1%}")
     print(f"  {'(covered)':<14} {'':>5} {'':>9} {'':>8} {'':>8} "
           f"{covered:>6.1%}")
+
+
+def traffic_breakdown(events: List[Dict]) -> List[Dict]:
+    """Aggregate the ph="C" traffic counter tracks: one row per
+    (track, series) with sample count and total / mean / max bytes."""
+    samples: Dict[tuple, List[float]] = {}
+    for e in events:
+        if e.get("ph") != "C" or e.get("cat") != "traffic":
+            continue
+        for series, val in (e.get("args") or {}).items():
+            samples.setdefault((e["name"], series), []).append(float(val))
+    rows = []
+    for (track, series), vals in sorted(samples.items()):
+        rows.append({
+            "track": track,
+            "series": series,
+            "count": len(vals),
+            "total": sum(vals),
+            "mean": sum(vals) / len(vals),
+            "max": max(vals),
+        })
+    return rows
+
+
+def print_traffic_table(events: List[Dict]) -> None:
+    rows = traffic_breakdown(events)
+    if not rows:
+        print("no traffic counter events in trace "
+              "(run serve with --trace-out on an engine build that "
+              "emits hbm.* counter tracks)")
+        return
+    print("HBM traffic counters (bytes per step sample):")
+    hdr = (f"  {'track':<12} {'series':<16} {'count':>5} "
+           f"{'total MB':>9} {'mean kB':>8} {'max kB':>8}")
+    print(hdr)
+    print("  " + "-" * (len(hdr) - 2))
+    for r in rows:
+        print(f"  {r['track']:<12} {r['series']:<16} {r['count']:>5} "
+              f"{r['total'] / 1e6:>9.3f} {r['mean'] / 1e3:>8.1f} "
+              f"{r['max'] / 1e3:>8.1f}")
 
 
 _SEG_CHARS = {"QUEUED": "░", "PREFILL": "▒", "DECODE": "█"}
@@ -137,6 +182,10 @@ def main():
     ap.add_argument("--validate", action="store_true",
                     help="run structural validation (nesting, overlap, "
                          "lifecycle order) before rendering")
+    ap.add_argument("--traffic", action="store_true",
+                    help="render the per-phase HBM byte counter tracks "
+                         "(hbm.decode / hbm.prefill) instead of the "
+                         "time tables")
     args = ap.parse_args()
     events = load_trace(args.trace)
     if args.validate:
@@ -147,6 +196,9 @@ def main():
               f"{stats['requests']} requests"
               + (f", phase/wall coverage {cov:.1%}"
                  if cov is not None else ""))
+    if args.traffic:
+        print_traffic_table(events)
+        return
     print_phase_table(events)
     print()
     print_waterfall(events, width=args.width)

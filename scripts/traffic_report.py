@@ -1,0 +1,179 @@
+#!/usr/bin/env python
+"""Render a serving traffic artifact (--traffic-out) and gate it.
+
+Three jobs, composable in one invocation:
+
+* table — per-role HBM attribution (sparse vs dense bytes per step,
+  share of the stream), per-phase byte totals, KV accounting, energy
+  projection;
+* cross-check — the modeled-vs-compiled delta per phase, exiting
+  nonzero when a phase's ratio left its tolerance band;
+* budget gate — compare the run's modeled + compiled bytes against the
+  checked-in per-arch budget (``scripts/traffic_budget.json``), exiting
+  nonzero when any gated figure regressed beyond the budget's
+  tolerance.  ``--update-budget`` reseeds the arch's budget entry from
+  the current artifact instead of gating (run it once after an
+  intentional traffic change and commit the file).
+
+Usage:
+  python scripts/traffic_report.py /tmp/traffic.json
+  python scripts/traffic_report.py /tmp/traffic.json \
+      --budget scripts/traffic_budget.json
+  python scripts/traffic_report.py /tmp/traffic.json \
+      --budget scripts/traffic_budget.json --update-budget
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+#: figures the budget file pins, as (label, extractor) — modeled bytes
+#: catch regressions in the analytical model / packing, compiled bytes
+#: catch regressions in what XLA actually emits
+GATED = {
+    "weight_sparse_bytes_per_step":
+        lambda tr: tr["weight"]["sparse_bytes_per_step"],
+    "weight_dense_bytes_per_step":
+        lambda tr: tr["weight"]["dense_bytes_per_step"],
+    "compiled_decode_bytes":
+        lambda tr: (tr["crosscheck"] or {}).get("decode", {}).get(
+            "compiled_bytes"),
+}
+
+
+def _mb(b: float) -> str:
+    return f"{b / 1e6:8.3f}"
+
+
+def print_tables(doc: dict) -> None:
+    tr = doc["traffic"]
+    print(f"arch {doc['arch']}  sparsity {doc.get('sparsity', 0):.2f}  "
+          f"slots {doc.get('num_slots', '?')}")
+    print(f"\n{'role':<14s} {'tensors':>7s} {'sparse MB':>10s} "
+          f"{'dense MB':>10s} {'ratio':>6s} {'share':>6s}")
+    roles = tr["per_role"]
+    tot_s = sum(r["sparse_bytes"] for r in roles.values()) or 1
+    for role, r in sorted(roles.items(),
+                          key=lambda kv: -kv[1]["sparse_bytes"]):
+        ratio = (r["dense_bytes"] / r["sparse_bytes"]
+                 if r["sparse_bytes"] else 1.0)
+        print(f"{role:<14s} {r['tensors']:>7d} "
+              f"{_mb(r['sparse_bytes']):>10s} "
+              f"{_mb(r['dense_bytes']):>10s} {ratio:>6.2f} "
+              f"{r['sparse_bytes'] / tot_s:>6.1%}")
+    w = tr["weight"]
+    print(f"{'total':<14s} {sum(r['tensors'] for r in roles.values()):>7d} "
+          f"{_mb(w['sparse_bytes_per_step']):>10s} "
+          f"{_mb(w['dense_bytes_per_step']):>10s} "
+          f"{w['reduction']:>6.2f}")
+
+    print(f"\n{'phase':<10s} {'steps':>6s} {'weight MB':>10s} "
+          f"{'kv read MB':>11s} {'kv write MB':>12s}")
+    for ph, row in tr["phases"].items():
+        steps = row.get("steps", row.get("calls", 0))
+        print(f"{ph:<10s} {steps:>6d} {_mb(row['weight_bytes']):>10s} "
+              f"{_mb(row['kv_read_bytes']):>11s} "
+              f"{_mb(row['kv_write_bytes']):>12s}")
+    kv = tr["kv"]
+    print(f"\nKV: {kv['line_bytes_per_token']}B/token-line, "
+          f"{kv['read_bytes'] / 1e6:.3f}MB read / "
+          f"{kv['write_bytes'] / 1e6:.3f}MB written"
+          + (f", {kv['prefix_saved_bytes'] / 1e6:.3f}MB saved by prefix "
+             f"reuse" if kv["prefix_saved_bytes"] else ""))
+    en = tr["energy"]
+    print(f"energy: {en['pj_per_token'] / 1e6:.3f}uJ/token sparse vs "
+          f"{en['pj_per_token_dense'] / 1e6:.3f}uJ/token dense | "
+          f"{en['tops_per_watt']:.2f} vs {en['tops_per_watt_dense']:.2f} "
+          f"TOPS/W ({en['macs_per_token']} MACs/token)")
+    for ph, rl in tr["roofline"].items():
+        print(f"roofline[{ph}]: {rl['bottleneck']}-bound "
+              f"(compute {rl['compute_s'] * 1e6:.2f}us / memory "
+              f"{rl['memory_s'] * 1e6:.2f}us)")
+
+
+def check_crosscheck(doc: dict) -> bool:
+    cx = doc["traffic"]["crosscheck"]
+    if cx is None:
+        print("\ncross-check: not run (artifact written without it?)")
+        return True
+    ok = True
+    print(f"\ncross-check (dispatch: {cx['dispatch']}):")
+    for ph in ("decode", "prefill"):
+        if ph not in cx:
+            continue
+        e = cx[ph]
+        lo, hi = e["tolerance"]
+        good = e["within_band"]
+        ok &= good
+        print(f"  {ph}: modeled {e['modeled']['total_bytes'] / 1e6:.3f}MB "
+              f"vs compiled {e['compiled_bytes'] / 1e6:.3f}MB — ratio "
+              f"{e['ratio']:.2f} in [{lo:g}, {hi:g}] "
+              f"{'ok' if good else 'VIOLATED'}")
+    return ok
+
+
+def gate(doc: dict, budget_path: str, update: bool) -> bool:
+    tr = doc["traffic"]
+    try:
+        with open(budget_path) as f:
+            budgets = json.load(f)
+    except FileNotFoundError:
+        budgets = {}
+    arch = doc["arch"]
+    current = {k: fn(tr) for k, fn in GATED.items()}
+    current = {k: v for k, v in current.items() if v is not None}
+    if update:
+        entry = budgets.setdefault(arch, {"tolerance": 0.15})
+        entry.update(current)
+        with open(budget_path, "w") as f:
+            json.dump(budgets, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"\nbudget updated: {arch} -> {budget_path}")
+        return True
+    entry = budgets.get(arch)
+    if entry is None:
+        print(f"\nno budget entry for {arch} in {budget_path} — run with "
+              f"--update-budget to seed one", file=sys.stderr)
+        return False
+    tol = entry.get("tolerance", 0.15)
+    ok = True
+    print(f"\nbudget gate ({budget_path}, tolerance {tol:.0%}):")
+    for key, val in current.items():
+        ref = entry.get(key)
+        if ref is None:
+            continue
+        ceil = ref * (1.0 + tol)
+        good = val <= ceil
+        ok &= good
+        print(f"  {key}: {val / 1e6:.3f}MB vs budget {ref / 1e6:.3f}MB "
+              f"(ceiling {ceil / 1e6:.3f}MB) "
+              f"{'ok' if good else 'REGRESSED'}")
+    return ok
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("artifact", help="traffic JSON from --traffic-out")
+    ap.add_argument("--budget", default=None,
+                    help="per-arch budget file to gate against "
+                         "(scripts/traffic_budget.json)")
+    ap.add_argument("--update-budget", action="store_true",
+                    help="reseed this arch's budget entry from the "
+                         "artifact instead of gating")
+    args = ap.parse_args()
+    with open(args.artifact) as f:
+        doc = json.load(f)
+    if doc.get("schema") != "repro.serve.traffic/v1":
+        print(f"unrecognized artifact schema: {doc.get('schema')!r}",
+              file=sys.stderr)
+        return 2
+    print_tables(doc)
+    ok = check_crosscheck(doc)
+    if args.budget:
+        ok &= gate(doc, args.budget, args.update_budget)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

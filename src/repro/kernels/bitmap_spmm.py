@@ -168,6 +168,11 @@ def hbm_traffic_model(x_shape: Tuple[int, int], w: BitmapWeight,
     Decode shapes (M < bm) follow the kernel's small-M path: one row
     block (mt = 1), so the whole compressed weight streams exactly once
     per step — the regime where the bitmap format pays off most.
+
+    The ``components`` sub-dict breaks the totals into the per-tensor
+    terms (activation re-fetches, output writes, sparse vs dense weight
+    streams) that the serving traffic ledger (``serve/traffic.py``)
+    attributes per role; the top-level keys keep their legacy meaning.
     """
     m, k = x_shape
     _, n = w.shape
@@ -181,4 +186,12 @@ def hbm_traffic_model(x_shape: Tuple[int, int], w: BitmapWeight,
         "sparse_bytes": x_bytes + out_bytes + w_sparse,
         "dense_bytes": x_bytes + out_bytes + w_dense,
         "weight_compression": w.compression,
+        "components": {
+            "x_bytes": x_bytes,
+            "out_bytes": out_bytes,
+            "w_sparse_bytes": w_sparse,
+            "w_dense_bytes": w_dense,
+            "col_blocks": nt,
+            "row_blocks": mt,
+        },
     }

@@ -11,18 +11,13 @@ from __future__ import annotations
 import re
 from typing import Dict
 
+from repro.launch.hlo_shapes import shape_bytes
+
 # hardware constants (per chip) — TPU v5e class, from the assignment
 PEAK_FLOPS = 197e12          # bf16 FLOP/s
 HBM_BW = 819e9               # bytes/s
 ICI_BW = 50e9                # bytes/s per link (~ per-direction usable)
 
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
-    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
-}
-
-_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 _COLL_RE = re.compile(
     r"=\s*(\([^=]*?\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
     r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
@@ -32,19 +27,6 @@ _WIRE_FACTOR = {
     "all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
     "all-to-all": 1.0, "collective-permute": 1.0,
 }
-
-
-def shape_bytes(text: str) -> int:
-    total = 0
-    for dtype, dims in _SHAPE_RE.findall(text):
-        if dtype not in _DTYPE_BYTES:
-            continue
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dtype]
-    return total
 
 
 def collective_bytes(hlo_text: str) -> Dict[str, float]:

@@ -26,14 +26,9 @@ import math
 import re
 from typing import Dict, List, Optional
 
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
-    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
-    "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "u1": 1, "s1": 1,
-}
+from repro.launch.hlo_shapes import (shape_bytes as _shape_bytes,
+                                     shape_dims as _shape_dims)
 
-_ARRAY_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 _INSTR_RE = re.compile(
     r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[a-z0-9]+"
     r"\[[0-9,]*\](?:\{[^}]*\})?))\s+([\w\-]+)\((.*)$")
@@ -48,21 +43,6 @@ _SKIP_BYTES = {
     "while", "conditional", "call", "after-all", "add-dependency",
     "opt-barrier", "partition-id", "replica-id", "custom-call",
 }
-
-
-def _shape_dims(text: str) -> List[List[int]]:
-    out = []
-    for dt, dims in _ARRAY_RE.findall(text):
-        if dt in _DTYPE_BYTES:
-            out.append((dt, [int(d) for d in dims.split(",") if d]))
-    return out
-
-
-def _shape_bytes(text: str) -> int:
-    total = 0
-    for dt, dims in _shape_dims(text):
-        total += _DTYPE_BYTES[dt] * math.prod(dims)
-    return total
 
 
 @dataclasses.dataclass

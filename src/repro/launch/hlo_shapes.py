@@ -1,0 +1,46 @@
+"""Shared HLO shape vocabulary: dtype widths + shape-text parsing.
+
+``launch/hlo_counters.py`` (the while-aware FLOP/byte analyzer) and
+``launch/hlo_analysis.py`` (collective traffic + roofline terms) each
+carried their own copy of the XLA dtype-width table and the
+``f32[128,64]``-style shape regex; the copies had already drifted (the
+analysis table was missing the fnuz f8 variants and u1/s1).  This module
+is the one definition both import.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import List, Tuple
+
+#: bytes per element for every XLA primitive dtype that can appear in a
+#: printed HLO shape (sub-byte types round up to one byte, matching how
+#: HloCostAnalysis charges them)
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "u1": 1, "s1": 1,
+}
+
+#: one array shape inside HLO text: ``f32[8,128]`` / ``pred[]`` — tuple
+#: shapes match once per element
+ARRAY_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def shape_dims(text: str) -> List[Tuple[str, List[int]]]:
+    """Every ``(dtype, dims)`` array shape in ``text`` (tuple shapes
+    yield one entry per element; non-dtype brackets are skipped)."""
+    out = []
+    for dt, dims in ARRAY_RE.findall(text):
+        if dt in DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def shape_bytes(text: str) -> int:
+    """Total byte size of every array shape in ``text``."""
+    total = 0
+    for dt, dims in shape_dims(text):
+        total += DTYPE_BYTES[dt] * math.prod(dims)
+    return total

@@ -19,6 +19,7 @@ from repro.serve.telemetry import (ChromeTrace, Clock, Counter, EventLog,
                                    StepSpans, Telemetry, load_trace,
                                    validate_events, validate_trace)
 from repro.serve.trace import RollingStat, percentiles, poisson_trace
+from repro.serve.traffic import TrafficLedger, role_of
 
 __all__ = [
     "AuditViolation", "ChromeTrace", "Clock", "Counter",
@@ -28,7 +29,7 @@ __all__ = [
     "PrefillPlanner", "PrefixBlock", "Request", "RequestRejected",
     "RequestState", "RollingStat", "ServeEngine", "ServeError",
     "ServeOverloaded", "SlotKVCache", "SlotScheduler", "StepSpans",
-    "TERMINAL_STATES", "Telemetry", "choose_block", "load_trace",
-    "pack_lm_head", "pack_model", "percentiles", "poisson_trace",
-    "validate_events", "validate_trace",
+    "TERMINAL_STATES", "Telemetry", "TrafficLedger", "choose_block",
+    "load_trace", "pack_lm_head", "pack_model", "percentiles",
+    "poisson_trace", "role_of", "validate_events", "validate_trace",
 ]

@@ -56,6 +56,7 @@ the affected step deterministically instead of serving garbage.
 from __future__ import annotations
 
 import math
+import os
 import time
 import warnings
 from collections import deque
@@ -81,6 +82,7 @@ from repro.serve.prefill import PrefillPlanner
 from repro.serve.request import Request, RequestState
 from repro.serve.scheduler import SlotScheduler
 from repro.serve.telemetry import Clock, MetricsRegistry, Telemetry
+from repro.serve.traffic import TrafficLedger
 from repro.sparse.format import BitmapWeight, pack_bitmap
 from repro.sparse.pruning import global_l1_prune, per_tensor_prune, \
     sparsity_of
@@ -125,7 +127,8 @@ class ServeEngine:
                  faults: Optional[FaultPlan] = None,
                  trace_out: Optional[str] = None,
                  events_out: Optional[str] = None,
-                 metrics_out: Optional[str] = None):
+                 metrics_out: Optional[str] = None,
+                 traffic_out: Optional[str] = None):
         """``head_sparsity``: ``global_l1_prune`` deliberately keeps
         (tied) embeddings dense, so the LM head is additionally pruned
         per-tensor to this level before packing — that is what gives the
@@ -522,11 +525,20 @@ class ServeEngine:
         self.auditor: Optional[InvariantAuditor] = (
             InvariantAuditor(self) if audit else None)
 
+        # ---- traffic observatory: the ledger is always on (host-int
+        # counters in the registry, like every other subsystem);
+        # ``traffic_out`` additionally writes the attribution +
+        # compiled-HLO cross-check artifact at close() ----
+        self.traffic_out = traffic_out
+        self._traffic_written = False
+        self.traffic = TrafficLedger(self)
+
         # ---- telemetry: every subsystem registers into the one
         # registry; spans/events only exist when an output is asked for
         # (telemetry-off keeps the hot path allocation-free) ----
         self.scheduler.register_metrics(m)
         self.kv.register_metrics(m)
+        self.traffic.register_metrics(m)
         if self.planner is not None:
             self.planner.register_metrics(m)
         if self.packed is not None:
@@ -575,11 +587,28 @@ class ServeEngine:
 
     def close(self) -> List[str]:
         """Write the configured telemetry artifacts (``--trace-out`` /
-        ``--events-out`` / ``--metrics-out``); idempotent, returns the
-        paths written.  A telemetry-off engine returns []."""
-        if self.telemetry is None:
-            return []
-        return self.telemetry.close()
+        ``--events-out`` / ``--metrics-out`` / ``--traffic-out``);
+        idempotent, returns the paths written.  An artifacts-off engine
+        returns []."""
+        written: List[str] = []
+        if self.traffic_out and not self._traffic_written:
+            self._traffic_written = True
+            d = os.path.dirname(self.traffic_out)
+            if d:
+                os.makedirs(d, exist_ok=True)
+            self.traffic.write(self.traffic_out)
+            written.append(self.traffic_out)
+        if self.telemetry is not None:
+            written.extend(self.telemetry.close())
+        return written
+
+    def _trace_counter(self, name: str, values: Dict[str, int]) -> None:
+        """Emit one Chrome-trace counter sample (per-phase HBM byte
+        track); no-op without ``--trace-out`` — one ``is None`` check."""
+        if self.telemetry is None or self.telemetry.trace is None:
+            return
+        self.telemetry.trace.counter(name, self._clock.now_or_zero(),
+                                     values)
 
     def _register_report_views(self) -> None:
         """Register ``report()``'s top-level fields and sections as
@@ -620,6 +649,7 @@ class ServeEngine:
         m.view("head_compression", lambda: self.head_compression)
         m.view("head_fallback", lambda: self.head_fallback)
         m.view("weight_stream", self.weight_stream_report)
+        m.view("traffic", self.traffic.report)
         m.view("paging", self.paging_report)
         m.view("cache_resets", lambda: self.kv.resets)
         m.view("lifecycle", self.lifecycle_report)
@@ -933,6 +963,9 @@ class ServeEngine:
             self.quarantined[path] = reason
             self.auditor.drop(path)
             self._emit("quarantine", tensor=path, reason=reason)
+        # a quarantine flips manifest entries to dense — the traffic
+        # ledger's cached role rows are stale now
+        self.traffic.invalidate()
         if self.page_len:
             self.kv.flush_prefix()
         for slot in list(self.scheduler.active):
@@ -995,6 +1028,8 @@ class ServeEngine:
                     int(slot))
         hidden, cache = self._prefill(tokens, pos, lens)
         self.kv.cache = cache
+        self._trace_counter("hbm.prefill",
+                            self.traffic.on_prefill(pos, lens))
         jax.block_until_ready(hidden)
         wall = self._wall()
         if self.prefix_reuse:
@@ -1209,6 +1244,8 @@ class ServeEngine:
                             if not in_prefill(s)]
                 if sp is not None:
                     sp.end()
+            self._trace_counter("hbm.decode", self.traffic.on_decode(
+                [int(self._pos[s]) for s in decoding]))
             if sp is not None:
                 sp.begin("decode")
             nxt, logits, cache = self._decode(

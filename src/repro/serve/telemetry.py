@@ -360,6 +360,16 @@ class ChromeTrace:
             ev["args"] = args
         self.events.append(ev)
 
+    def counter(self, name: str, t_s: float, values: Dict[str, float], *,
+                pid: int = PID_ENGINE, tid: int = TID_STEP,
+                cat: str = "traffic") -> None:
+        """One counter-track sample (ph "C"): perfetto renders each
+        ``values`` key as a stacked series under ``name`` — the per-phase
+        HBM byte tracks."""
+        self.events.append({"ph": "C", "name": name, "cat": cat,
+                            "ts": t_s * 1e6, "pid": pid, "tid": tid,
+                            "args": dict(values)})
+
     def instant(self, name: str, t_s: float, *, pid: int = PID_ENGINE,
                 tid: int = TID_STEP, cat: str = "marker",
                 args: Optional[Dict] = None) -> None:

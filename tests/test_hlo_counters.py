@@ -65,6 +65,28 @@ def test_dus_cache_update_charged_at_update_size():
     assert r["bytes"] < 6 * buffer_bytes, r["bytes"] / buffer_bytes
 
 
+@pytest.mark.parametrize("arch", ["olmo-1b", "granite-moe-3b-a800m"])
+def test_real_jitted_serve_steps_analyzable(arch):
+    """The analyzer must handle the *real* serving programs — jitted
+    decode and prefill steps with their while-loops, DUS cache updates,
+    and donated buffers — not just the synthetic shapes above.  The
+    full {packed, dense} × {contig, paged} band matrix lives in
+    test_traffic.py; this pins the analyzer side: real HLO parses, and
+    the counted bytes sit at or above the dispatch's fetch floor."""
+    from repro.configs import get_smoke_config
+    from repro.serve import ServeEngine
+
+    eng = ServeEngine(get_smoke_config(arch), seed=0, num_slots=2,
+                      max_len=32, sparsity=0.5, paged=True, page_len=8,
+                      prefill_chunk=8)
+    for phase in ("decode", "prefill"):
+        compiled = eng.traffic._lowered(phase).compile()
+        r = analyze(compiled.as_text())
+        assert r["flops"] > 0 and r["bytes"] > 0
+        floor = eng.traffic.modeled_executed(phase)["total_bytes"]
+        assert r["bytes"] >= floor, (phase, r["bytes"], floor)
+
+
 def test_parse_handles_tuple_shapes_with_index_comments():
     """Shapes like (s32[], f32[8]{0}, /*index=5*/ f32[4]) must parse."""
     txt = """ENTRY %main (a: f32[8]) -> f32[8] {
