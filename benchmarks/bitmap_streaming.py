@@ -37,13 +37,14 @@ except ImportError:                     # package: imported from repo root
 
 def _run_engine(cfg, *, slots: int, sparsity: float, requests: int,
                 rate: float, max_len: int, seed: int,
-                stream_weights: bool) -> dict:
+                stream_weights: bool, model_parallel: int = 1) -> dict:
     # head_sparsity=0.0 streams the *exact* head bitmap-packed, so the
     # packed and dense engines decode identical tokens at any sparsity
     # and the tok/s delta is pure dispatch overhead (the serving regime
     # additionally prunes the head — report()["head_compression"]).
     eng = ServeEngine(cfg, num_slots=slots, max_len=max_len,
                       sparsity=sparsity, seed=seed,
+                      model_parallel=model_parallel,
                       stream_weights=stream_weights,
                       bitmap_head=stream_weights,
                       head_sparsity=0.0 if stream_weights else None)
@@ -122,6 +123,45 @@ def sweep(arch: str = "olmo-1b", smoke: bool = True,
     return {"rows": rows, "headline": headline}
 
 
+def mp_sweep(arch: str, mp: int, smoke: bool = True,
+             sparsity: float = 0.75, slots: int = 8, requests: int = 8,
+             rate: float = 0.7, max_len: int = 48, seed: int = 0,
+             repeats: int = 2, verbose: bool = True) -> dict:
+    """One sharded-serving cell: the packed engine at ``model_parallel=
+    mp`` on whatever device topology the process was launched with
+    (CI forces 8 fake host devices via XLA_FLAGS).  Reports tok/s plus
+    the per-device vs total weight-HBM bytes — the 1/mp storage cut the
+    sharded layout exists for."""
+    import jax
+
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    kw = dict(slots=slots, sparsity=sparsity, requests=requests,
+              rate=rate, max_len=max_len, seed=seed,
+              stream_weights=True, model_parallel=mp)
+    rep = max((_run_engine(cfg, **kw) for _ in range(repeats)),
+              key=lambda r: r["tok_per_s"])
+    ws = rep["weight_stream"]
+    row = {
+        "arch": arch, "model_parallel": mp,
+        "devices": jax.device_count(),
+        "shards": ws["shards"],
+        "tok_per_s": rep["tok_per_s"],
+        "weight_bytes_per_step": ws["sparse_bytes_per_step"],
+        "device_weight_bytes_per_step": ws["device_sparse_bytes_per_step"],
+        "device_fraction": (ws["device_sparse_bytes_per_step"]
+                            / max(ws["sparse_bytes_per_step"], 1)),
+        "shard_fallbacks": len(ws["shard_fallbacks"]),
+    }
+    if verbose:
+        print(f"  {arch:10s} mp={mp} ({row['devices']} devices, "
+              f"{row['shards']} shards) | {row['tok_per_s']:8.1f} tok/s "
+              f"| per-device weight HBM "
+              f"{row['device_weight_bytes_per_step']/1e6:6.2f}MB of "
+              f"{row['weight_bytes_per_step']/1e6:6.2f}MB/step "
+              f"({row['device_fraction']:.2f}x)")
+    return row
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--archs", "--arch", nargs="+", default=["olmo-1b"],
@@ -135,10 +175,35 @@ def main():
     ap.add_argument("--max-len", type=int, default=48)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--model-parallel", type=int, default=0,
+                    help="run ONLY the sharded-serving cell at this mp "
+                         "(launch with XLA_FLAGS=--xla_force_host_"
+                         "platform_device_count=8 for a real mesh); "
+                         "merges under the separate 'model_parallel' "
+                         "key, leaving the single-device rows intact")
     ap.add_argument("--out", default=None,
                     help="merge rows + per-arch headlines into this JSON "
                          "file (e.g. BENCH_serve.json)")
     args = ap.parse_args()
+    if args.model_parallel:
+        import jax
+        with bench_timer("bitmap_streaming_mp") as timing:
+            mp_rows = [mp_sweep(arch, args.model_parallel,
+                                smoke=args.smoke,
+                                sparsity=max(args.sparsities),
+                                requests=args.requests, rate=args.rate,
+                                max_len=args.max_len, seed=args.seed,
+                                repeats=args.repeats)
+                       for arch in args.archs]
+        if args.out:
+            data = load_bench(args.out)
+            data["model_parallel"] = {"devices": jax.device_count(),
+                                      "rows": mp_rows,
+                                      "wall_s": timing.wall_s}
+            write_atomic(args.out, data)
+            print(f"merged {len(mp_rows)} model_parallel rows "
+                  f"into {args.out}")
+        return
     rows, headlines = [], {}
     with bench_timer("bitmap_streaming") as timing:
         for arch in args.archs:

@@ -18,6 +18,16 @@ PYTHONPATH=src python benchmarks/bitmap_streaming.py --smoke \
     --sparsities 0.0 0.75 --slots 2 --requests 8 --max-len 32 --repeats 2 \
     --out BENCH_serve.json
 
+echo "== spmd smoke: sharded serving on 8 fake devices (mp=4 vs mp=1 bit-identical, per-device ledger gate) =="
+PYTHONPATH=src python scripts/spmd_smoke.py --arch olmo-1b --mp 4
+
+echo "== bench smoke: sharded serving cell -> BENCH_serve.json (model_parallel) =="
+XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+    python benchmarks/bitmap_streaming.py --smoke \
+    --archs olmo-1b granite-moe-3b-a800m --sparsities 0.75 \
+    --requests 6 --max-len 32 --repeats 1 --model-parallel 4 \
+    --out BENCH_serve.json
+
 echo "== manifest coverage report (MoE expert stacks + SSM mixers packed) =="
 PYTHONPATH=src python scripts/manifest_report.py \
     --archs granite-moe-3b-a800m jamba-v0.1-52b

@@ -28,7 +28,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import pallas_compat
 
-from repro.sparse.format import BitmapWeight
+from repro.sparse.format import _TILE_ND, BitmapWeight
 
 
 def _decompress_tile(bits_packed, values, row_start, bk: int, bn: int,
@@ -134,7 +134,34 @@ def group_slice(w: BitmapWeight, g: int) -> BitmapWeight:
     """
     return BitmapWeight(packed_bits=w.packed_bits[g], values=w.values[g],
                         row_start=w.row_start[g], shape=w.shape,
-                        block=w.block)
+                        block=w.block, shard=w.shard)
+
+
+def shard_slice(w: BitmapWeight, s: int) -> BitmapWeight:
+    """The s-th shard of a sharded ``BitmapWeight`` as a plain per-shard
+    ``BitmapWeight`` (shard axis indexed away, per-shard logical shape).
+
+    Column shards hold ``(K, N/S)``, row shards ``(K/S, N)`` — exact
+    contiguous slices of the unsharded matrix, so the Pallas kernel
+    consumes them as-is and the caller composes outputs (concat over N
+    for col, sum over partial products for row).
+    """
+    assert w.shard is not None
+    mode, shards = w.shard
+    k, n = w.shape
+    shape = (k, n // shards) if mode == "col" else (k // shards, n)
+
+    def take(leaf, name):
+        if leaf is None:
+            return None
+        return jnp.take(leaf, s, axis=leaf.ndim - _TILE_ND[name] - 1)
+
+    return BitmapWeight(
+        packed_bits=take(w.packed_bits, "packed_bits"),
+        values=take(w.values, "values"),
+        row_start=take(w.row_start, "row_start"),
+        shape=shape, block=w.block,
+        dense_cache=take(w.dense_cache, "dense_cache"))
 
 
 def bitmap_spmm_grouped(x: jax.Array, w: BitmapWeight, *, bm: int = 128,

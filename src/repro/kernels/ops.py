@@ -8,6 +8,8 @@ body through the interpreter — that is how the kernels are validated here.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -15,11 +17,13 @@ from repro.kernels import ref as _ref
 from repro.kernels.bitmap_spmm import bitmap_spmm as _bitmap_spmm_pallas
 from repro.kernels.bitmap_spmm import (
     bitmap_spmm_grouped as _bitmap_spmm_grouped_pallas)
+from repro.kernels.bitmap_spmm import shard_slice
 from repro.kernels.block_sparse import (
     block_sparse_matmul as _block_sparse_pallas)
 from repro.kernels.flash_attention import (
     flash_attention as _flash_attention_pallas)
-from repro.sparse.format import BitmapWeight, BlockSparseWeight
+from repro.sparse.format import (BitmapWeight, BlockSparseWeight,
+                                 unshard_bitmap)
 
 
 def default_impl() -> str:
@@ -36,12 +40,36 @@ def bitmap_spmm(x: jax.Array, w: BitmapWeight, impl: str | None = None,
     if x.ndim != 2:
         x = x.reshape(-1, x.shape[-1])
     if impl == "xla":
-        out = _ref.bitmap_spmm_ref(x, w)
+        # the reference path is tiling-independent, so the unsharded
+        # fold-back is value-identical to per-shard composition
+        out = _ref.bitmap_spmm_ref(x, unshard_bitmap(w))
+    elif w.shard is not None:
+        out = _sharded_spmm(x, w, _bitmap_spmm_pallas,
+                            interpret=(impl == "pallas_interpret"), **kw)
     else:
         out = _bitmap_spmm_pallas(x, w,
                                   interpret=(impl == "pallas_interpret"),
                                   **kw)
     return out.reshape(lead + (w.shape[1],)) if len(lead) != 1 else out
+
+
+def _sharded_spmm(x: jax.Array, w: BitmapWeight, kernel, **kw) -> jax.Array:
+    """Per-shard Pallas dispatch over a sharded ``BitmapWeight``.
+
+    Column shards each produce a contiguous N slice (concat); row shards
+    each consume a contiguous K slice and their partial products sum —
+    the same composition a psum performs across model-axis devices.
+    x's contraction axis is last (2D ``(M, K)`` or grouped ``(G, M, K)``).
+    """
+    mode, shards = w.shard
+    if mode == "col":
+        return jnp.concatenate(
+            [kernel(x, shard_slice(w, s), **kw) for s in range(shards)],
+            axis=-1)
+    ks = w.shape[0] // shards
+    parts = [kernel(x[..., s * ks:(s + 1) * ks], shard_slice(w, s), **kw)
+             for s in range(shards)]
+    return functools.reduce(jnp.add, parts)
 
 
 def bitmap_spmm_grouped(x: jax.Array, w: BitmapWeight,
@@ -53,7 +81,10 @@ def bitmap_spmm_grouped(x: jax.Array, w: BitmapWeight,
     only its own compressed tiles."""
     impl = impl or default_impl()
     if impl == "xla":
-        return _ref.bitmap_spmm_grouped_ref(x, w)
+        return _ref.bitmap_spmm_grouped_ref(x, unshard_bitmap(w))
+    if w.shard is not None:
+        return _sharded_spmm(x, w, _bitmap_spmm_grouped_pallas,
+                             interpret=(impl == "pallas_interpret"), **kw)
     return _bitmap_spmm_grouped_pallas(
         x, w, interpret=(impl == "pallas_interpret"), **kw)
 

@@ -16,6 +16,7 @@ leading period-stack dim, handled by spec prepending.
 """
 from __future__ import annotations
 
+import dataclasses
 import re
 from typing import Any, Optional
 
@@ -24,6 +25,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models.config import ModelConfig
 from repro.models.model import cache_structs, param_structs
+from repro.sparse.format import _TILE_ND, BitmapWeight
 
 # (regex over path, spec over the *unstacked* leaf dims)
 _RULES = [
@@ -196,6 +198,85 @@ def cache_specs(cfg: ModelConfig, mesh, batch: int, max_len: int,
         return P(None, bspec, None)
 
     return jax.tree_util.tree_map_with_path(rule_for, structs)
+
+
+# --------------------------------------------------------------------------
+# Packed-layout sharding: the bitmap-compressed serving analogue of the
+# dense _RULES above.  Column-parallel tensors split the N tile axis
+# (each shard owns its output columns — no cross-shard composition);
+# row-parallel tensors split K (per-shard partial products sum, the psum
+# composition `kernels/ops._sharded_spmm` performs).  The LM head is
+# vocab-split (col).  Tensors with no rule (router, SSM decay/mix
+# vectors, norms) stay replicated.
+
+PACKED_COL = {
+    ("attn", "wq"), ("attn", "wk"), ("attn", "wv"),
+    ("mlp", "w_gate"), ("mlp", "w_up"),
+    ("moe", "w_gate"), ("moe", "w_up"),
+    ("mamba", "in_proj"), ("mamba", "dt_proj"),
+    ("rwkv", "w_r"), ("rwkv", "w_k"), ("rwkv", "w_v"), ("rwkv", "w_g"),
+    ("rwkv_cm", "cm_k"),
+}
+PACKED_ROW = {
+    ("attn", "wo"),
+    ("mlp", "w_down"),
+    ("moe", "w_down"),
+    ("mamba", "out_proj"), ("mamba", "x_proj"),
+    ("rwkv", "w_o"),
+    ("rwkv_cm", "cm_v"),
+}
+
+
+def packed_mode(comp: str, name: str) -> Optional[str]:
+    """Shard mode for a packed tensor: "col", "row", or None (replicate)."""
+    if (comp, name) in PACKED_COL:
+        return "col"
+    if (comp, name) in PACKED_ROW:
+        return "row"
+    return None
+
+
+def bitmap_sharded(bw: Optional[BitmapWeight], mesh) -> bool:
+    """Whether this ``BitmapWeight``'s explicit shard axis lines up with
+    the mesh's live model axis (the single predicate the spec builder
+    and the shard_map gather share)."""
+    return (bw is not None and bw.shard is not None
+            and "model" in mesh.shape
+            and mesh.shape["model"] == bw.shard[1] > 1)
+
+
+def bitmap_specs(bw: Optional[BitmapWeight], mesh) -> Any:
+    """A ``BitmapWeight`` of ``PartitionSpec`` leaves mirroring ``bw``:
+    'model' on the explicit shard axis when it matches the mesh, else
+    fully replicated.  ``dataclasses.replace`` keeps the static fields
+    (shape/block/shard), so the spec tree has the same treedef as the
+    array tree — valid for ``device_put`` and ``shard_map`` in_specs."""
+    if bw is None:
+        return None
+    live = bitmap_sharded(bw, mesh)
+
+    def spec(leaf, tile_nd):
+        if leaf is None:
+            return None
+        if not live:
+            return P()
+        axes: list = [None] * leaf.ndim
+        axes[leaf.ndim - tile_nd - 1] = "model"
+        return P(*axes)
+
+    return dataclasses.replace(
+        bw,
+        packed_bits=spec(bw.packed_bits, _TILE_ND["packed_bits"]),
+        values=spec(bw.values, _TILE_ND["values"]),
+        row_start=spec(bw.row_start, _TILE_ND["row_start"]),
+        dense_cache=spec(bw.dense_cache, _TILE_ND["dense_cache"]))
+
+
+def packed_specs(tree: Any, mesh) -> Any:
+    """Specs for a packed block tree (``PackedModel.blocks``): per-leaf
+    ``bitmap_specs``, Nones preserved."""
+    return jax.tree.map(lambda bw: bitmap_specs(bw, mesh), tree,
+                        is_leaf=lambda x: isinstance(x, BitmapWeight))
 
 
 def named(mesh, spec_tree):

@@ -5,14 +5,18 @@ array pytrees — the exact functions the dry-run lowers and the drivers run.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map_nocheck
+from repro.launch.sharding import bitmap_sharded, bitmap_specs, packed_specs
 from repro.models.config import ModelConfig
 from repro.models.model import (decode_step, forward, lm_head_weight,
                                 lm_loss, loss_fn, prefill_hidden)
+from repro.sparse.format import BitmapWeight, gather_bitmap
 from repro.train import optimizer as opt_lib
 
 
@@ -202,3 +206,165 @@ def build_serve_step(cfg: ModelConfig, impl: Optional[str] = None,
         return next_tok, logits, new_cache
 
     return serve_step
+
+
+# ---------------------------------------------------------------- SPMD ----
+# Sharded serving: the decode/prefill steps above, run under shard_map on
+# the engine's elastic (data, model) mesh.  Packed ``BitmapWeight`` leaves
+# arrive model-sharded along their explicit shard axis (format.shard_bitmap
+# layout — the per-device HBM cut), paged KV pools arrive data-sharded
+# along the pages axis (paging.PagedKVCache(shards=...) keeps every slot's
+# pages shard-local).  The body is gather-then-compute: sharded operands
+# are all-gathered device-side, the *unchanged* base step runs, and each
+# device keeps its own slice of the new cache — so the numerics (and the
+# sampled tokens) are bit-identical to the single-device step by
+# construction, while the weights and pool pages each device *stores*
+# are 1/shard of the stack.
+
+
+def _replicated(tree) -> object:
+    """A matching tree of fully-replicated PartitionSpecs (None stays
+    None, so optional step kwargs spec out naturally)."""
+    return jax.tree.map(lambda _: P(), tree)
+
+
+def _cache_specs(cache, data_pools: frozenset, ndata: int) -> Dict:
+    """Specs for the serve cache dict: paged k/v pools shard their pages
+    axis (axis 1, after the period stack) over "data"; everything else —
+    contiguous caches, recurrent state, non-pool blocks — replicates."""
+
+    def spec(bname, key, leaf):
+        if ndata > 1 and bname in data_pools and key in ("k", "v"):
+            axes: list = [None] * leaf.ndim
+            axes[1] = "data"
+            return P(*axes)
+        return P()
+
+    return {b: {k: spec(b, k, v) for k, v in leafd.items()}
+            for b, leafd in cache.items()}
+
+
+def _gather_cache(cache, data_pools: frozenset, ndata: int) -> Dict:
+    """Inside the shard_map body: reassemble the full page pools from
+    the per-device chunks (page ids in the tables are global)."""
+    if ndata <= 1 or not data_pools:
+        return cache
+    return {b: ({k: (jax.lax.all_gather(v, "data", axis=1, tiled=True)
+                     if k in ("k", "v") else v)
+                 for k, v in leafd.items()}
+                if b in data_pools else leafd)
+            for b, leafd in cache.items()}
+
+
+def _slice_cache(cache, data_pools: frozenset, ndata: int) -> Dict:
+    """Inverse of ``_gather_cache``: each device keeps its own shard's
+    contiguous page chunk of the written pool.  The paged allocator maps
+    every slot's pages (and its trash writes) inside its own shard's id
+    range, so the kept chunk holds exactly this device's slots' lines."""
+    if ndata <= 1 or not data_pools:
+        return cache
+    idx = jax.lax.axis_index("data")
+
+    def keep(leaf):
+        local = leaf.shape[1] // ndata
+        return jax.lax.dynamic_slice_in_dim(leaf, idx * local, local,
+                                            axis=1)
+
+    return {b: ({k: (keep(v) if k in ("k", "v") else v)
+                 for k, v in leafd.items()}
+                if b in data_pools else leafd)
+            for b, leafd in cache.items()}
+
+
+def _gather_packed(tree, mesh):
+    """All-gather every model-sharded ``BitmapWeight`` in a packed block
+    tree back to its unsharded layout (replicated leaves pass through)."""
+    if tree is None:
+        return None
+    return jax.tree.map(
+        lambda bw: (gather_bitmap(bw, "model")
+                    if bitmap_sharded(bw, mesh) else bw),
+        tree, is_leaf=lambda x: isinstance(x, BitmapWeight))
+
+
+def build_serve_step_spmd(cfg: ModelConfig, mesh,
+                          impl: Optional[str] = None, top_k: int = 0,
+                          data_pools: Sequence[str] = ()) -> Callable:
+    """``build_serve_step`` under shard_map on ``mesh`` — same signature,
+    same numerics, sharded storage.
+
+    ``data_pools``: names of the paged-cache pools whose pages axis is
+    sharded over the mesh "data" axis (the engine passes its
+    ``PagedKVCache`` pool names when ``kv.shards`` matches the data
+    extent; empty = cache fully replicated).  PartitionSpecs are derived
+    from the actual arguments at trace time: ``BitmapWeight`` leaves via
+    ``sharding.bitmap_specs`` (their explicit shard axis over "model"),
+    pool k/v leaves over "data", everything else replicated.
+    """
+    base = build_serve_step(cfg, impl=impl, top_k=top_k)
+    pools = frozenset(data_pools)
+    ndata = int(mesh.shape.get("data", 1))
+
+    def serve_step(params, cache, tokens, pos, embeds=None, lm_weight=None,
+                   packed=None, embed_rng=None, sample_keys=None,
+                   temperature=None, top_ks=None, page_tables=None):
+        args = (params, cache, tokens, pos, embeds, lm_weight, packed,
+                embed_rng, sample_keys, temperature, top_ks, page_tables)
+        cspecs = _cache_specs(cache, pools, ndata)
+        in_specs = (_replicated(params), cspecs, _replicated(tokens),
+                    _replicated(pos), _replicated(embeds),
+                    bitmap_specs(lm_weight, mesh),
+                    packed_specs(packed, mesh), _replicated(embed_rng),
+                    _replicated(sample_keys), _replicated(temperature),
+                    _replicated(top_ks), _replicated(page_tables))
+
+        def body(params, cache, tokens, pos, embeds, lm_weight, packed,
+                 embed_rng, sample_keys, temperature, top_ks, page_tables):
+            lm = (gather_bitmap(lm_weight, "model")
+                  if bitmap_sharded(lm_weight, mesh) else lm_weight)
+            nxt, logits, new_cache = base(
+                params, _gather_cache(cache, pools, ndata), tokens, pos,
+                embeds=embeds, lm_weight=lm,
+                packed=_gather_packed(packed, mesh), embed_rng=embed_rng,
+                sample_keys=sample_keys, temperature=temperature,
+                top_ks=top_ks, page_tables=page_tables)
+            return nxt, logits, _slice_cache(new_cache, pools, ndata)
+
+        return shard_map_nocheck(body, mesh, in_specs,
+                                 (P(), P(), cspecs))(*args)
+
+    return serve_step
+
+
+def build_prefill_step_spmd(cfg: ModelConfig, mesh,
+                            impl: Optional[str] = None,
+                            data_pools: Sequence[str] = ()) -> Callable:
+    """``build_prefill_step`` under shard_map on ``mesh`` — the chunked
+    prefill analogue of ``build_serve_step_spmd`` (same gather-then-
+    compute body, same spec derivation, no head)."""
+    base = build_prefill_step(cfg, impl=impl)
+    pools = frozenset(data_pools)
+    ndata = int(mesh.shape.get("data", 1))
+
+    def prefill_step(params, cache, tokens, pos, lens, embeds=None,
+                     packed=None, page_tables=None):
+        args = (params, cache, tokens, pos, lens, embeds, packed,
+                page_tables)
+        cspecs = _cache_specs(cache, pools, ndata)
+        in_specs = (_replicated(params), cspecs, _replicated(tokens),
+                    _replicated(pos), _replicated(lens),
+                    _replicated(embeds), packed_specs(packed, mesh),
+                    _replicated(page_tables))
+
+        def body(params, cache, tokens, pos, lens, embeds, packed,
+                 page_tables):
+            hidden, new_cache = base(
+                params, _gather_cache(cache, pools, ndata), tokens, pos,
+                lens, embeds=embeds, packed=_gather_packed(packed, mesh),
+                page_tables=page_tables)
+            return hidden, _slice_cache(new_cache, pools, ndata)
+
+        return shard_map_nocheck(body, mesh, in_specs,
+                                 (P(), cspecs))(*args)
+
+    return prefill_step

@@ -27,10 +27,22 @@ def _current_mesh():
         return None
 
 
+def _manual_axes(mesh) -> bool:
+    """True when tracing inside ``shard_map`` over this mesh — its axes
+    are *manual* there, so a with_sharding_constraint naming them is
+    both an error and pointless (the per-device layout is explicit)."""
+    try:
+        from jax._src import core
+        bound = core.get_axis_env().axis_sizes
+        return any(a in bound for a in mesh.axis_names)
+    except Exception:
+        return False
+
+
 def hint(x: jax.Array, *axes: Optional[str]) -> jax.Array:
     """Constrain dim i of x to axis names axes[i] ("batch"/"model"/None)."""
     mesh = _current_mesh()
-    if mesh is None:
+    if mesh is None or _manual_axes(mesh):
         return x
     spec = []
     for dim, ax in zip(x.shape, axes):

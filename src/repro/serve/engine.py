@@ -69,7 +69,8 @@ import numpy as np
 from repro.configs import get_config, get_smoke_config
 from repro.launch import sharding as shd
 from repro.launch.mesh import make_elastic_mesh
-from repro.launch.steps import build_prefill_step, build_serve_step
+from repro.launch.steps import (build_prefill_step, build_prefill_step_spmd,
+                                build_serve_step, build_serve_step_spmd)
 from repro.models.config import ModelConfig
 from repro.models.model import init_params, lm_head_weight
 from repro.serve.cache import SlotKVCache
@@ -83,7 +84,7 @@ from repro.serve.request import Request, RequestState
 from repro.serve.scheduler import SlotScheduler
 from repro.serve.telemetry import Clock, MetricsRegistry, Telemetry
 from repro.serve.traffic import TrafficLedger
-from repro.sparse.format import BitmapWeight, pack_bitmap
+from repro.sparse.format import BitmapWeight, pack_bitmap, shard_bitmap
 from repro.sparse.pruning import global_l1_prune, per_tensor_prune, \
     sparsity_of
 
@@ -95,16 +96,29 @@ def _head_block(d_model: int, vocab: int,
 
 
 def pack_lm_head(params, cfg: ModelConfig, sparsity: float = 0.0,
-                 cache_dense: bool = False) -> Optional[BitmapWeight]:
-    """Prune (per-tensor) + pack the (D, V) LM head once for serving."""
+                 cache_dense: bool = False,
+                 shards: int = 1) -> Optional[BitmapWeight]:
+    """Prune (per-tensor) + pack the (D, V) LM head once for serving.
+
+    ``shards > 1`` asks for the vocab-split (column-parallel) sharded
+    layout: the head packs against a tile of the per-shard ``(D, V/S)``
+    slice and ``shard_bitmap`` splits the tile axes, so each model-axis
+    device stores 1/S of the packed head.  Falls back to the replicated
+    pack (``shard=None`` — the caller records the typed reason) when the
+    vocab doesn't divide or no per-shard tile fits."""
     block = _head_block(cfg.d_model, cfg.vocab_size)
     if block is None:
         return None
     w = lm_head_weight(params, cfg)
     if sparsity > 0:
         w = per_tensor_prune(w, sparsity)
-    return pack_bitmap(np.asarray(w.astype(jnp.float32)), block=block,
-                       cache_dense=cache_dense)
+    wf = np.asarray(w.astype(jnp.float32))
+    if shards > 1 and cfg.vocab_size % shards == 0:
+        sblock = _head_block(cfg.d_model, cfg.vocab_size // shards)
+        if sblock is not None:
+            bw = pack_bitmap(wf, block=sblock, cache_dense=cache_dense)
+            return shard_bitmap(bw, shards, "col")
+    return pack_bitmap(wf, block=block, cache_dense=cache_dense)
 
 
 class ServeEngine:
@@ -118,6 +132,7 @@ class ServeEngine:
                  stream_weights: bool = True, top_k: int = 0,
                  paged: bool = False, page_len: int = 16,
                  page_pool_tokens: Optional[int] = None,
+                 kv_shards: Optional[int] = None,
                  prefill_chunk: int = 0, prefix_reuse: bool = False,
                  preempt: bool = False, history: int = 512,
                  deadline_ms: Optional[float] = None,
@@ -281,34 +296,54 @@ class ServeEngine:
         cache_dense = (impl or default_impl()) == "xla"
         self.stream_fallback: Optional[str] = None
         mp_actual = int(self.mesh.shape.get("model", 1))
-        if stream_weights and mp_actual > 1:
-            # packed leaves are host-built (values are packed along
-            # flattened tile dims, so the dense param_specs don't apply);
-            # GSPMD would replicate the whole compressed stack per device,
-            # regressing the sharded dense path's per-device memory —
-            # fall back to dense dispatch until the packed format grows a
-            # sharded layout
-            stream_weights = False
-            self.stream_fallback = (
-                f"model_parallel={mp_actual}: no sharded layout for "
-                f"packed weights yet; stack served dense")
-            self._warn_fallback(
-                "stream", self.stream_fallback,
-                f"whole-stack bitmap streaming fell back to dense: "
-                f"{self.stream_fallback}")
-        elif not stream_weights:
+        self.model_parallel = mp_actual
+        # SPMD serving: any multi-device elastic mesh routes the decode /
+        # prefill steps through shard_map (steps.build_serve_step_spmd) —
+        # packed BitmapWeight leaves shard their explicit shard axis over
+        # the "model" axis (format.shard_bitmap layout), paged KV pools
+        # shard their pages axis over "data".  Single device keeps the
+        # plain jitted steps, bit-identical to before.
+        self._spmd = int(self.mesh.devices.size) > 1
+        if not stream_weights:
             self.stream_fallback = "stream_weights=False"
             self.fallbacks["stream"] = self.stream_fallback
         self.packed: Optional[PackedModel] = (
-            pack_model(self.params, cache_dense=cache_dense)
+            pack_model(self.params, cache_dense=cache_dense,
+                       shards=(mp_actual if self._spmd else 1))
             if stream_weights else None)
+        if self._spmd and self.packed is not None:
+            # place each sharded leaf's shard axis on its own model-axis
+            # device (replicated-fallback leaves broadcast) — the
+            # per-device packed-HBM cut the stream report models
+            self.packed.blocks = jax.device_put(
+                self.packed.blocks,
+                shd.named(self.mesh,
+                          shd.packed_specs(self.packed.blocks, self.mesh)))
         self.head_sparsity = (sparsity if head_sparsity is None
                               else head_sparsity)
         self.head_fallback: Optional[str] = None
+        self.head_shard_fallback: Optional[str] = None
         if bitmap_head:
-            self.lm_weight = pack_lm_head(self.params, cfg,
-                                          self.head_sparsity,
-                                          cache_dense=cache_dense)
+            self.lm_weight = pack_lm_head(
+                self.params, cfg, self.head_sparsity,
+                cache_dense=cache_dense,
+                shards=(mp_actual if self._spmd else 1))
+            if (self._spmd and mp_actual > 1
+                    and self.lm_weight is not None
+                    and self.lm_weight.shard is None):
+                self.head_shard_fallback = (
+                    f"shard: vocab={cfg.vocab_size} not divisible by "
+                    f"{mp_actual} shards (or no per-shard tile); head "
+                    f"stored replicated")
+                self._warn_fallback(
+                    "head_shard", self.head_shard_fallback,
+                    f"bitmap LM head stored replicated: "
+                    f"{self.head_shard_fallback}")
+            if self._spmd and self.lm_weight is not None:
+                self.lm_weight = jax.device_put(
+                    self.lm_weight,
+                    shd.named(self.mesh,
+                              shd.bitmap_specs(self.lm_weight, self.mesh)))
             if self.lm_weight is None:
                 self.head_fallback = (
                     f"no (BK, BN) tile divides (d_model={cfg.d_model}, "
@@ -327,16 +362,10 @@ class ServeEngine:
 
         self.scheduler = SlotScheduler(num_slots, history=history)
         # paged KV cache: pages only help when some block caches per-token
-        # KV lines, and the paged pools (like the packed weights) have no
-        # sharded layout yet — fall back to contiguous with a reason
+        # KV lines — otherwise fall back to contiguous with a reason
         self.paging_fallback: Optional[str] = None
         if not paged:
             page_len = 0
-        elif mp_actual > 1:
-            page_len = 0
-            self.paging_fallback = (
-                f"model_parallel={mp_actual}: no sharded layout for paged "
-                f"KV pools yet; contiguous cache kept")
         elif not any(b.mixer == "attn" for b in cfg.pattern):
             page_len = 0
             self.paging_fallback = (
@@ -396,12 +425,43 @@ class ServeEngine:
                     f"{self.preempt_fallback}")
         self.preempt = preempt
 
+        # data-axis KV sharding: partition the paged pools' page-id
+        # ranges (and the slots) across the mesh "data" axis so every
+        # slot's pages are device-local — allocation stays host-side,
+        # the shard_map step gathers/slices the pools per call.  Auto
+        # (kv_shards=None): the data extent whenever it divides the
+        # slot count; indivisible shapes record a typed reason and keep
+        # the replicated pool instead of crashing.
+        self.kv_shard_fallback: Optional[str] = None
+        ndata = int(self.mesh.shape.get("data", 1))
+        kv_actual = 1
+        if page_len and self._spmd and ndata > 1:
+            want = ndata if kv_shards is None else int(kv_shards)
+            if want > 1 and (num_slots % want == 0 and want <= num_slots
+                             and want == ndata):
+                kv_actual = want
+            elif want > 1:
+                self.kv_shard_fallback = (
+                    f"shard: kv_shards={want} must equal the mesh data "
+                    f"axis ({ndata}) and divide num_slots={num_slots}; "
+                    f"page pools stored replicated")
+                self._warn_fallback(
+                    "kv_shard", self.kv_shard_fallback,
+                    f"paged KV pools stored replicated: "
+                    f"{self.kv_shard_fallback}")
         self.kv = (PagedKVCache(cfg, num_slots, max_len, page_len,
                                 pool_tokens=page_pool_tokens,
-                                strict=not preempt)
+                                strict=not preempt, shards=kv_actual)
                    if page_len else SlotKVCache(cfg, num_slots, max_len))
+        self._kv_data_pools: Tuple[str, ...] = (
+            tuple(self.kv.pools) if page_len and kv_actual > 1 else ())
         self.top_k_default = top_k
-        step_fn = build_serve_step(cfg, impl=impl, top_k=top_k)
+        if self._spmd:
+            step_fn = build_serve_step_spmd(
+                cfg, self.mesh, impl=impl, top_k=top_k,
+                data_pools=self._kv_data_pools)
+        else:
+            step_fn = build_serve_step(cfg, impl=impl, top_k=top_k)
         self._jit_step = jax.jit(step_fn, donate_argnums=(1,))
 
         # chunked prefill: admitted prompts are ingested prefill_chunk
@@ -432,9 +492,15 @@ class ServeEngine:
         self.planner: Optional[PrefillPlanner] = (
             PrefillPlanner(num_slots, prefill_chunk)
             if prefill_chunk else None)
+        if self._spmd:
+            prefill_fn = build_prefill_step_spmd(
+                cfg, self.mesh, impl=impl,
+                data_pools=self._kv_data_pools)
+        else:
+            prefill_fn = build_prefill_step(cfg, impl=impl)
         self._jit_prefill = (
-            jax.jit(build_prefill_step(cfg, impl=impl),
-                    donate_argnums=(1,)) if prefill_chunk else None)
+            jax.jit(prefill_fn, donate_argnums=(1,))
+            if prefill_chunk else None)
         # engine-owned accounting lives in the metrics registry — the
         # report sections below are rendered views over these metrics
         m = self.metrics
@@ -864,8 +930,12 @@ class ServeEngine:
                 self._reclaim(requester)
 
     def _reclaim(self, requester: int) -> None:
+        # sharded pools: only a same-shard victim's pages can serve the
+        # requester (page-id ranges are disjoint across shards)
+        d = self.kv.slot_shard(requester)
         victims = [s for s in self.scheduler.active
-                   if s != requester and not self._pinned(s)]
+                   if s != requester and not self._pinned(s)
+                   and self.kv.slot_shard(s) == d]
         if not victims and self.kv.restore_held():
             # a fault-injected page squeeze confiscated the headroom and
             # there is no one left to preempt: hand the pages back early
@@ -1159,7 +1229,13 @@ class ServeEngine:
             # until retirements free enough pages — never a crash.  The
             # gate *reserves* (check-and-commit), so multiple admissions
             # in one pass can't over-commit the pool.
-            fits = lambda r: self.kv.reserve(self._commit_tokens(r))
+            # the reservation lands in the candidate slot's shard — admit
+            # evaluates fits *before* popping the slot, so free[0] is the
+            # slot this request will get (sharded pools commit per shard;
+            # unsharded pools ignore the slot)
+            fits = lambda r: self.kv.reserve(
+                self._commit_tokens(r),
+                slot=(self.scheduler.free[0] if self.scheduler.free else 0))
         for slot, req in self.scheduler.admit(now, fits=fits):
             # ingest = prompt plus tokens generated before a preemption:
             # a recomputed request teacher-forces/prefills its own
@@ -1171,7 +1247,7 @@ class ServeEngine:
             if self.page_len:
                 blocks = None
                 if self.prefix_reuse:
-                    _, blocks = self.kv.match_prefix(ing)
+                    _, blocks = self.kv.match_prefix(ing, slot=slot)
                 shared = self.kv.admit(slot, self._commit_tokens(req),
                                        prefix=blocks)
             else:
@@ -1386,6 +1462,9 @@ class ServeEngine:
                       * np.dtype(np.float32).itemsize)
         head_sparse = (self.lm_weight.hbm_bytes
                        if self.lm_weight is not None else head_dense)
+        head_sh = (self.lm_weight.shard[1]
+                   if self.lm_weight is not None
+                   and self.lm_weight.shard is not None else 1)
         activated = (self.num_slots * self.cfg.top_k
                      if self.cfg.num_experts else None)
         if self.packed is not None:
@@ -1409,13 +1488,29 @@ class ServeEngine:
                    "packed_tensors": 0, "fallback_tensors": 0,
                    "activated_experts": activated,
                    "fallbacks": {"*": self.stream_fallback
-                                 or "stream_weights=False"}}
+                                 or "stream_weights=False"},
+                   "shards": 1,
+                   "device_sparse_bytes_per_step": dense,
+                   "device_dense_bytes_per_step": dense,
+                   "shard_fallbacks": {}}
         sparse = rep["sparse_bytes_per_step"] + head_sparse
         dense = rep["dense_bytes_per_step"] + head_dense
+        # per-device terms: a sharded head streams 1/S of its packed
+        # bytes per model-axis device; the dense head (and a replicated
+        # packed head) is resident — and streamed — whole on every device
+        dev_sparse = (rep["device_sparse_bytes_per_step"]
+                      + head_sparse // head_sh)
+        dev_dense = rep["device_dense_bytes_per_step"] + head_dense
+        shard_fb = dict(rep.get("shard_fallbacks", {}))
+        if self.head_shard_fallback:
+            shard_fb["lm_head"] = self.head_shard_fallback
         return {**rep,
                 "sparse_bytes_per_step": sparse,
                 "dense_bytes_per_step": dense,
-                "reduction": dense / sparse if sparse else 1.0}
+                "reduction": dense / sparse if sparse else 1.0,
+                "device_sparse_bytes_per_step": dev_sparse,
+                "device_dense_bytes_per_step": dev_dense,
+                "shard_fallbacks": shard_fb}
 
     def prefill_report(self) -> dict:
         """The prefill section: chunk-call accounting + the step split."""

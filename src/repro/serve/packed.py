@@ -60,7 +60,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.sparse.format import (BitmapWeight, pack_bitmap_experts,
-                                 pack_bitmap_stacked)
+                                 pack_bitmap_stacked, shard_bitmap)
 
 # (component, tensor) pairs with a compressed dispatch path in the
 # decode step.  2-D entries are period-stacked projections; GROUPED
@@ -128,6 +128,12 @@ class PackEntry:
     dense_bytes: int
     layout: str = "dense"
     experts: int = 0
+    #: sharded layout: ("col"|"row", S) when the packed leaf carries an
+    #: explicit shard axis; None for replicated/unsharded tensors
+    shard: Optional[Tuple[str, int]] = None
+    #: why a TP-ruled tensor could not shard (stored replicated); ""
+    #: when sharded or when no rule applies
+    shard_reason: str = ""
 
 
 @dataclasses.dataclass
@@ -136,6 +142,7 @@ class PackedModel:
 
     blocks: Dict                     # mirrors params["blocks"]
     manifest: List[PackEntry]
+    shards: int = 1                  # model-axis shard count at pack time
 
     @property
     def packed_entries(self) -> List[PackEntry]:
@@ -181,6 +188,7 @@ class PackedModel:
                 e.layout = "dense"
                 e.block = None
                 e.sparse_bytes = e.dense_bytes
+                e.shard = None
         return True
 
     def register_metrics(self, reg) -> None:
@@ -208,6 +216,12 @@ class PackedModel:
 
         sparse = sum(step_bytes(e, "sparse_bytes") for e in self.manifest)
         dense = sum(step_bytes(e, "dense_bytes") for e in self.manifest)
+        dev_sparse = sum(
+            entry_device_bytes(e, "sparse_bytes", activated_experts)
+            for e in self.manifest)
+        dev_dense = sum(
+            entry_device_bytes(e, "dense_bytes", activated_experts)
+            for e in self.manifest)
         return {
             "sparse_bytes_per_step": sparse,
             "dense_bytes_per_step": dense,
@@ -216,11 +230,59 @@ class PackedModel:
             "fallback_tensors": len(self.fallback_entries),
             "activated_experts": activated_experts,
             "fallbacks": {e.path: e.reason for e in self.fallback_entries},
+            "shards": self.shards,
+            "device_sparse_bytes_per_step": dev_sparse,
+            "device_dense_bytes_per_step": dev_dense,
+            "shard_fallbacks": {e.path: e.shard_reason
+                                for e in self.manifest if e.shard_reason},
         }
 
 
+def entry_device_bytes(e: PackEntry, attr: str,
+                       activated: Optional[int]) -> int:
+    """Per-device per-step bytes for one manifest row: the exact
+    aggregate accounting (``int(round(bytes × activated_scale))``)
+    divided by the tensor's shard count — single-sourced so the traffic
+    ledger's per-device rows sum to the engine's device aggregates by
+    construction."""
+    b = int(round(getattr(e, attr) * activated_scale(e.experts, activated)))
+    return b // e.shard[1] if e.shard is not None else b
+
+
+def _shard_block(comp: str, name: str, k: int, n: int, cap: int,
+                 shards: int) -> Tuple[Optional[Tuple[int, int]],
+                                       Optional[Tuple[str, int]], str]:
+    """Choose the (block, shard, shard_reason) for one tensor.
+
+    With ``shards == 1`` or no TP rule for (comp, name), this is plain
+    ``choose_block`` with no shard.  Otherwise the tile is chosen against
+    the *per-shard* slice — ``(k, n/S)`` column-parallel, ``(k/S, n)``
+    row-parallel — so every shard's range is whole tiles; a dim the
+    shard count doesn't divide (or with no valid per-shard tile) stays
+    replicated with a typed reason instead of failing the pack.
+    """
+    from repro.launch.sharding import packed_mode
+    mode = shards > 1 and packed_mode(comp, name) or None
+    if not mode:
+        return choose_block(k, n, cap), None, ""
+    dim, dim_name = (n, "N") if mode == "col" else (k, "K")
+    if dim % shards != 0:
+        return choose_block(k, n, cap), None, (
+            f"shard: {dim_name}={dim} not divisible by {shards} shards; "
+            f"stored replicated")
+    block = (choose_block(k, n // shards, cap) if mode == "col"
+             else choose_block(k // shards, n, cap))
+    if block is None:
+        return choose_block(k, n, cap), None, (
+            f"shard: no (BK, BN) tile fits the per-shard "
+            f"{'column' if mode == 'col' else 'row'} slice; "
+            f"stored replicated")
+    return block, (mode, shards), ""
+
+
 def _pack_leaf(path: str, comp: str, name: str, w, cap: int,
-               cache_dense: bool) -> Tuple[PackEntry, Optional[BitmapWeight]]:
+               cache_dense: bool, shards: int = 1
+               ) -> Tuple[PackEntry, Optional[BitmapWeight]]:
     arr = np.asarray(w)
     dense_bytes = arr.size * arr.dtype.itemsize
     sparsity = 1.0 - np.count_nonzero(arr) / max(arr.size, 1)
@@ -241,15 +303,19 @@ def _pack_leaf(path: str, comp: str, name: str, w, cap: int,
             return fallback(f"group stack with unexpected rank "
                             f"(ndim={arr.ndim}, want 4)")
         _, g, k, n = arr.shape
-        block = choose_block(k, n, cap)
+        block, shard, shard_reason = _shard_block(comp, name, k, n, cap,
+                                                  shards)
         if block is None:
             return fallback(
                 f"no (BK, BN) tile divides ({k}, {n}) with BN % 8")
         bw = pack_bitmap_experts(arr, block=block, cache_dense=cache_dense)
+        if shard is not None:
+            bw = shard_bitmap(bw, shard[1], shard[0])
         entry = PackEntry(path=path, shape=arr.shape, packed=True, reason="",
                           block=block, sparsity=sparsity,
                           sparse_bytes=bw.hbm_bytes, dense_bytes=dense_bytes,
-                          layout="grouped", experts=routed)
+                          layout="grouped", experts=routed, shard=shard,
+                          shard_reason=shard_reason)
         return entry, bw
     if key not in DISPATCHABLE_2D:
         # every GEMM operand of the decode step is listed above; the rest
@@ -258,19 +324,22 @@ def _pack_leaf(path: str, comp: str, name: str, w, cap: int,
     if arr.ndim != 3:                # (P, K, N) = period-stacked projection
         return fallback(f"not a 2-D projection (ndim={arr.ndim - 1})")
     _, k, n = arr.shape
-    block = choose_block(k, n, cap)
+    block, shard, shard_reason = _shard_block(comp, name, k, n, cap, shards)
     if block is None:
         return fallback(f"no (BK, BN) tile divides ({k}, {n}) with BN % 8")
     bw = pack_bitmap_stacked(arr, block=block, cache_dense=cache_dense)
+    if shard is not None:
+        bw = shard_bitmap(bw, shard[1], shard[0])
     entry = PackEntry(path=path, shape=arr.shape, packed=True, reason="",
                       block=block, sparsity=sparsity,
                       sparse_bytes=bw.hbm_bytes, dense_bytes=dense_bytes,
-                      layout="stacked")
+                      layout="stacked", shard=shard,
+                      shard_reason=shard_reason)
     return entry, bw
 
 
 def pack_model(params: Dict, cap: int = 128,
-               cache_dense: bool = False) -> PackedModel:
+               cache_dense: bool = False, shards: int = 1) -> PackedModel:
     """Pack every dispatchable serve-time GEMM operand of ``params``.
 
     Packing is lossless (per-tensor budget = max tile non-zero count), so
@@ -282,6 +351,12 @@ def pack_model(params: Dict, cap: int = 128,
     the xla oracle dispatch (decompression is a pack-time cost off-TPU;
     it never counts toward the modeled HBM bytes) — the engine enables
     it when the resolved kernel impl is "xla".
+
+    ``shards > 1`` packs every TP-ruled tensor (``launch.sharding``'s
+    PACKED_COL/PACKED_ROW) with an explicit shard axis so each
+    model-axis device owns a local bitmap+values slice; tensors whose
+    sharded dim the count doesn't divide stay replicated with a typed
+    ``shard_reason`` in the manifest.
     """
     manifest: List[PackEntry] = []
     packed_blocks: Dict = {}
@@ -291,9 +366,11 @@ def pack_model(params: Dict, cap: int = 128,
             packed_c: Dict = {}
             for name, w in tensors.items():
                 path = f"blocks/{bname}/{comp}/{name}"
-                entry, bw = _pack_leaf(path, comp, name, w, cap, cache_dense)
+                entry, bw = _pack_leaf(path, comp, name, w, cap, cache_dense,
+                                       shards)
                 manifest.append(entry)
                 packed_c[name] = bw
             packed_b[comp] = packed_c
         packed_blocks[bname] = packed_b
-    return PackedModel(blocks=packed_blocks, manifest=manifest)
+    return PackedModel(blocks=packed_blocks, manifest=manifest,
+                       shards=shards)

@@ -124,6 +124,10 @@ class PagePool:
     held: List[int] = dataclasses.field(default_factory=list)
     #                      # fault-injection: pages confiscated from the
     #                      # free list (neither free nor referenced)
+    shards: int = 1        # data-axis shard count (1 = classic layout)
+    shard_pages: int = 0   # allocatable data pages per shard
+    committed_by: List[int] = dataclasses.field(default_factory=list)
+    #                      # per-shard committed pages (sums to committed)
 
 
 @dataclasses.dataclass
@@ -139,6 +143,7 @@ class PrefixBlock:
     length: int                    # tokens covered: (index + 1) * page_len
     pages: Dict[str, int]          # bname -> physical page id
     children: int = 0              # cached blocks extending this one
+    shard: int = 0                 # owning shard (pages are shard-local)
 
 
 def _chain_key(parent: Optional[bytes], tokens: Sequence[int]) -> bytes:
@@ -167,12 +172,23 @@ class PagedKVCache:
     ``strict=False`` relaxes commitments to whatever the engine chooses
     to reserve; a dry free list then raises ``OutOfPages`` after the
     prefix cache is drained, and the engine preempts.
+
+    ``shards > 1`` partitions slots into contiguous groups and each
+    pool's page ids into per-shard ranges (each with its own trash
+    page), matching a mesh data axis: a slot only ever maps pages of
+    its own shard, eviction/commitment/fault headroom are per-shard,
+    and prefix chains are shard-salted — so a PartitionSpec over the
+    pages axis makes every slot's KV pages device-local while
+    allocation stays host-side.  ``shards == 1`` is byte-identical to
+    the classic layout.
     """
 
     def __init__(self, cfg: ModelConfig, num_slots: int, max_len: int,
                  page_len: int, pool_tokens: Optional[int] = None,
-                 strict: bool = True):
+                 strict: bool = True, shards: int = 1):
         assert page_len > 0
+        assert 1 <= shards <= num_slots and num_slots % shards == 0, \
+            (shards, num_slots)
         layout = paged_layout(cfg, max_len, page_len)
         if not layout:
             raise ValueError(f"{cfg.name}: no attention blocks to page")
@@ -182,6 +198,13 @@ class PagedKVCache:
         self.page_len = page_len
         self.strict = strict
         self.resets = 0
+        # data-axis sharding: slots partition into `shards` contiguous
+        # groups; each shard owns a contiguous page-id range (its own
+        # trash page included), so a PartitionSpec over the pages axis
+        # keeps every slot's pages — and its trash writes — device-local
+        self.shards = shards
+        self._slot_shard = (np.arange(num_slots) * shards
+                            // num_slots).astype(np.int64)
 
         kv_line = (2 * cfg.num_periods * cfg.num_kv_heads
                    * cfg.resolved_head_dim
@@ -195,14 +218,24 @@ class PagedKVCache:
                 continue
             slots = layout[bname]
             _, ring = paged_addressing(slots, page_len, blk.window)
-            worst = num_slots * slots
-            pages = worst if budget is None else max(1, min(budget, worst))
+            # per-shard sizing: each shard serves num_slots/shards slots
+            # out of its own page range, so the worst case and any
+            # explicit budget divide by the shard count
+            worst = (num_slots // shards) * slots
+            per = (worst if budget is None
+                   else max(1, min(-(-budget // shards), worst)))
             pool = PagePool(
                 bname=bname, capacity=attn_capacity(blk, max_len),
-                page_slots=slots, pool_pages=pages, window=blk.window,
-                ring=ring, line_bytes=kv_line)
-            # page ids 1..pool_pages; id 0 is the trash page
-            pool.free = list(range(pages, 0, -1))
+                page_slots=slots, pool_pages=per * shards,
+                window=blk.window, ring=ring, line_bytes=kv_line,
+                shards=shards, shard_pages=per,
+                committed_by=[0] * shards)
+            # shard d owns ids d·(per+1)+1 .. d·(per+1)+per; id d·(per+1)
+            # is shard d's trash page (shards == 1 reduces to the classic
+            # layout: trash 0, data ids 1..pool_pages, LIFO pop from end)
+            pool.free = [d * (per + 1) + pg
+                         for d in range(shards - 1, -1, -1)
+                         for pg in range(per, 0, -1)]
             pool.table = np.zeros((num_slots, slots), np.int32)
             self.pools[bname] = pool
 
@@ -219,7 +252,8 @@ class PagedKVCache:
         self.evictions = 0
         self.forks = 0
 
-        pool_pages = {b: p.pool_pages + 1 for b, p in self.pools.items()}
+        pool_pages = {b: p.pool_pages + p.shards
+                      for b, p in self.pools.items()}
         self.cache = init_cache(cfg, num_slots, max_len, page_len=page_len,
                                 pool_pages=pool_pages)
         self._commit: List[Dict[str, int]] = [
@@ -259,34 +293,55 @@ class PagedKVCache:
         n = -(-max(need_tokens, 1) // self.page_len)
         return {b: min(n, p.page_slots) for b, p in self.pools.items()}
 
+    def slot_shard(self, slot: int) -> int:
+        """Which shard's page range ``slot`` allocates from."""
+        return int(self._slot_shard[slot])
+
+    def _page_shard(self, pool: PagePool, pg: int) -> int:
+        """Owning shard of a physical page id (trash pages included)."""
+        return pg // (pool.shard_pages + 1)
+
+    def _shard_held(self, pool: PagePool, d: int) -> int:
+        if pool.shards == 1:
+            return len(pool.held)
+        return sum(1 for pg in pool.held if self._page_shard(pool, pg) == d)
+
     def possible(self, need_tokens: int) -> bool:
-        """Can this request ever be admitted (empty engine)?"""
-        return all(n <= self.pools[b].pool_pages
+        """Can this request ever be admitted (empty engine)?  Sharded
+        pools admit out of one shard's range, so the bound is per-shard."""
+        return all(n <= self.pools[b].shard_pages
                    for b, n in self.pages_for(need_tokens).items())
 
-    def fits(self, need_tokens: int) -> bool:
-        """Can this request be admitted *now* without risking mid-flight
-        page exhaustion for anyone already committed?  Confiscated
-        (fault-held) pages shrink the usable pool until restored."""
-        return all(self.pools[b].committed + n
-                   <= self.pools[b].pool_pages - len(self.pools[b].held)
+    def fits(self, need_tokens: int, slot: int = 0) -> bool:
+        """Can this request be admitted *now* — into ``slot``'s shard —
+        without risking mid-flight page exhaustion for anyone already
+        committed there?  Confiscated (fault-held) pages shrink the
+        usable shard until restored."""
+        d = self.slot_shard(slot)
+        return all(self.pools[b].committed_by[d] + n
+                   <= self.pools[b].shard_pages
+                   - self._shard_held(self.pools[b], d)
                    for b, n in self.pages_for(need_tokens).items())
 
-    def reserve(self, need_tokens: int) -> bool:
+    def reserve(self, need_tokens: int, slot: int = 0) -> bool:
         """Check-and-commit in one step — the scheduler's admission gate.
 
         Commits the pages immediately on success, so several admissions
         in one scheduler pass can't all pass a stale check and
         over-commit the pool.  ``admit`` then binds the reservation to
-        its slot without counting it again.  In strict mode the engine
+        its slot without counting it again (``slot`` must be the slot —
+        or any same-shard slot — the scheduler will hand out, so the
+        commitment lands in the right shard).  In strict mode the engine
         passes the worst-case need; in preemptible mode it passes the
         live ingest length, which is what lets occupancy rise at equal
         pool size.
         """
-        if not self.fits(need_tokens):
+        if not self.fits(need_tokens, slot=slot):
             return False
+        d = self.slot_shard(slot)
         for b, n in self.pages_for(need_tokens).items():
             self.pools[b].committed += n
+            self.pools[b].committed_by[d] += n
         return True
 
     def admit(self, slot: int, need_tokens: int,
@@ -310,19 +365,36 @@ class PagedKVCache:
 
     # ------------------------------------------------------- allocator ----
 
-    def _alloc(self, bname: str, pool: PagePool) -> int:
-        """Pop a fresh page off the free list (refcount 1), draining
-        cache-only prefix pages first when the list is dry."""
-        while not pool.free and self.evict_one(prefer=bname):
+    def _has_free(self, pool: PagePool, d: int) -> bool:
+        if pool.shards == 1:
+            return bool(pool.free)
+        return any(self._page_shard(pool, pg) == d for pg in pool.free)
+
+    def _pop_free(self, pool: PagePool, d: int) -> int:
+        """Pop the most recently freed page of shard ``d`` (plain LIFO
+        pop when unsharded)."""
+        if pool.shards == 1:
+            return pool.free.pop()
+        for i in range(len(pool.free) - 1, -1, -1):
+            if self._page_shard(pool, pool.free[i]) == d:
+                return pool.free.pop(i)
+        raise IndexError(f"shard {d}: no free page")
+
+    def _alloc(self, bname: str, pool: PagePool, shard: int = 0) -> int:
+        """Pop a fresh page off ``shard``'s free range (refcount 1),
+        draining that shard's cache-only prefix pages first when dry."""
+        while not self._has_free(pool, shard) and \
+                self.evict_one(prefer=bname, shard=shard):
             pass
-        if not pool.free:
+        if not self._has_free(pool, shard):
             if self.strict:
                 raise AssertionError(
-                    f"{bname}: free list empty with {pool.committed} "
-                    f"committed of {pool.pool_pages} and no evictable "
+                    f"{bname}: shard {shard} free list empty with "
+                    f"{pool.committed_by[shard]} committed of "
+                    f"{pool.shard_pages} and no evictable "
                     f"prefix — commitment invariant broken")
             raise OutOfPages(bname)
-        pg = pool.free.pop()
+        pg = self._pop_free(pool, shard)
         pool.ref[pg] = 1
         pool.in_use += 1
         pool.peak = max(pool.peak, pool.in_use)
@@ -343,7 +415,7 @@ class PagedKVCache:
         table entry before it writes there.  Every other holder (other
         slots, the prefix cache) keeps the original page bytes."""
         src = int(pool.table[slot, pi])
-        dst = self._alloc(bname, pool)
+        dst = self._alloc(bname, pool, self.slot_shard(slot))
         if bname not in self._copy_fns:
             def _copy(cache, s, d, _b=bname):
                 leaf = dict(cache[_b])
@@ -367,14 +439,15 @@ class PagedKVCache:
         an eviction is tried first — evicting the cache's hold on this
         very page may drop its refcount to 1, resolving the share
         without any copy or allocation at all."""
+        d = self.slot_shard(slot)
         pg = int(pool.table[slot, pi])
         if pg == 0:
-            pool.table[slot, pi] = self._alloc(bname, pool)
+            pool.table[slot, pi] = self._alloc(bname, pool, d)
             self._dev_tables = None
             return
         while pool.ref[pg] > 1:
-            if not pool.free:
-                if self.evict_one(prefer=bname):
+            if not self._has_free(pool, d):
+                if self.evict_one(prefer=bname, shard=d):
                     continue
                 if self.strict:
                     raise AssertionError(
@@ -434,30 +507,36 @@ class PagedKVCache:
         cache (or another slot) still holds stay resident — that is the
         whole point: the next request with the same prompt adopts them."""
         self._dev_tables = None
+        d = self.slot_shard(slot)
         for b, pool in self.pools.items():
             row = pool.table[slot]
             for pg in [int(p) for p in row[row != 0]]:
                 self._deref(b, pool, pg)
             row[:] = 0
             pool.committed -= self._commit[slot].get(b, 0)
+            pool.committed_by[d] -= self._commit[slot].get(b, 0)
         self._commit[slot] = {}
 
     # ---------------------------------------------------- prefix cache ----
 
-    def _chain(self, tokens: Sequence[int], upto: int) -> List[bytes]:
+    def _chain(self, tokens: Sequence[int], upto: int,
+               shard: int = 0) -> List[bytes]:
         """Chain keys for the fully-covered shareable blocks of
-        ``tokens[:upto]``."""
+        ``tokens[:upto]``.  Chains are salted per shard (shard 0 keeps
+        the classic keys), so a prompt cached in one shard's page range
+        never matches — and never cross-shard-aliases — from another."""
         limit = min(upto, self.shareable_tokens)
-        keys, parent = [], None
+        keys, parent = [], bytes([shard]) if shard else None
         for i in range(limit // self.page_len):
             parent = _chain_key(
                 parent, tokens[i * self.page_len:(i + 1) * self.page_len])
             keys.append(parent)
         return keys
 
-    def match_prefix(self, tokens: Sequence[int]
+    def match_prefix(self, tokens: Sequence[int], slot: int = 0
                      ) -> Tuple[int, List[PrefixBlock]]:
-        """Longest cached chain matching this prompt's leading blocks.
+        """Longest cached chain (in ``slot``'s shard) matching this
+        prompt's leading blocks.
 
         Capped at ``len(tokens) - 1`` so the final prompt token always
         goes through the first decode step (which samples the first
@@ -465,7 +544,8 @@ class PagedKVCache:
         are LRU-touched.  Returns ``(matched_tokens, blocks)``.
         """
         blocks: List[PrefixBlock] = []
-        for key in self._chain(tokens, len(tokens) - 1):
+        for key in self._chain(tokens, len(tokens) - 1,
+                               self.slot_shard(slot)):
             entry = self.prefix.get(key)
             if entry is None:
                 break
@@ -516,8 +596,9 @@ class PagedKVCache:
         """
         if upto > self.shareable_tokens:
             return
+        shard = self.slot_shard(slot)
         parent: Optional[bytes] = None
-        for i, key in enumerate(self._chain(tokens, upto)):
+        for i, key in enumerate(self._chain(tokens, upto, shard)):
             entry = self.prefix.get(key)
             if entry is not None:
                 self.prefix.move_to_end(key)
@@ -533,20 +614,25 @@ class PagedKVCache:
                 self.pools[b].ref[pg] += 1
             self.prefix[key] = PrefixBlock(
                 key=key, parent=parent, index=i,
-                length=(i + 1) * self.page_len, pages=pages)
+                length=(i + 1) * self.page_len, pages=pages, shard=shard)
             if parent is not None:
                 self.prefix[parent].children += 1
             parent = key
 
-    def evict_one(self, prefer: Optional[str] = None) -> bool:
+    def evict_one(self, prefer: Optional[str] = None,
+                  shard: Optional[int] = None) -> bool:
         """Evict one leaf prefix block (LRU order), dropping the cache's
         page references.  ``prefer`` picks, among leaves, the oldest one
         whose page in that pool is cache-only (so eviction actually
-        frees a page there); falls back to the oldest leaf.  Returns
-        False when the cache is empty."""
+        frees a page there); falls back to the oldest leaf.  ``shard``
+        restricts to blocks owned by that shard (evicting another
+        shard's block can never free a page the requester can use).
+        Returns False when nothing is evictable."""
         chosen = None
         for key, e in self.prefix.items():
             if e.children:
+                continue
+            if shard is not None and e.shard != shard:
                 continue
             if prefer is not None and self.pools[prefer].ref.get(
                     e.pages[prefer], 0) == 1:
@@ -576,13 +662,25 @@ class PagedKVCache:
         any injected squeeze.  Returns the total pages held."""
         taken = 0
         for pool in self.pools.values():
-            take = min(n, len(pool.free))
             if self.strict:
-                take = min(take, max(0, pool.pool_pages - pool.committed
-                                     - len(pool.held)))
-            for _ in range(take):
-                pool.held.append(pool.free.pop())
-            taken += take
+                # per-shard headroom: the squeeze must not eat into any
+                # shard's committed pages (shards == 1 reduces to the
+                # classic pool-wide bound, same pages in the same order)
+                room = [max(0, pool.shard_pages - pool.committed_by[d]
+                            - self._shard_held(pool, d))
+                        for d in range(pool.shards)]
+            else:
+                room = [len(pool.free)] * pool.shards
+            took = 0
+            i = len(pool.free) - 1
+            while took < n and i >= 0:
+                d = self._page_shard(pool, pool.free[i])
+                if room[d] > 0:
+                    room[d] -= 1
+                    pool.held.append(pool.free.pop(i))
+                    took += 1
+                i -= 1
+            taken += took
         return taken
 
     def restore_held(self) -> int:
@@ -613,12 +711,17 @@ class PagedKVCache:
         * refcount exactness: each page's refcount equals its table
           mappings plus one per prefix-cache hold;
         * free xor referenced (plus fault-held), no double free, and
-          conservation: ``free + referenced + held == pool_pages``;
-        * no table entry aliases the trash page's id range, and no two
-          entries of the *same* slot map the same physical page;
-        * commitment bookkeeping matches the per-slot reservations.
+          per-shard conservation: each shard's ``free + referenced +
+          held == shard_pages`` (``pool_pages`` overall);
+        * no table entry aliases any shard's trash page, every slot's
+          pages live in its own shard's range (no cross-shard
+          aliasing), and no two entries of the *same* slot map the same
+          physical page;
+        * commitment bookkeeping matches the per-slot reservations,
+          per shard and overall.
         """
         for b, pool in self.pools.items():
+            span = pool.shard_pages + 1       # shard range incl. trash
             refs: Dict[int, int] = {}
             for slot in range(self.num_slots):
                 row = pool.table[slot]
@@ -626,10 +729,21 @@ class PagedKVCache:
                 if len(live) != len(set(live)):
                     raise AuditViolation(
                         f"{b}: slot {slot} table aliases a page: {live}")
+                d = self.slot_shard(slot)
+                stray = [pg for pg in live
+                         if self._page_shard(pool, pg) != d]
+                if stray:
+                    raise AuditViolation(
+                        f"{b}: slot {slot} (shard {d}) maps pages from "
+                        f"another shard: {stray}")
                 for pg in live:
                     refs[pg] = refs.get(pg, 0) + 1
             for e in self.prefix.values():
                 pg = e.pages[b]
+                if self._page_shard(pool, pg) != e.shard:
+                    raise AuditViolation(
+                        f"{b}: prefix block of shard {e.shard} holds "
+                        f"page {pg} of shard {self._page_shard(pool, pg)}")
                 refs[pg] = refs.get(pg, 0) + 1
             if refs != pool.ref:
                 drift = {pg: (refs.get(pg), pool.ref.get(pg))
@@ -645,36 +759,63 @@ class PagedKVCache:
                     f"{b}: page both free and referenced: "
                     f"{sorted(set(free) & set(refs))}")
             ids = set(free) | set(refs) | set(pool.held)
-            if not all(1 <= pg <= pool.pool_pages for pg in ids):
+            if not all(0 < pg < pool.shards * span and pg % span != 0
+                       for pg in ids):
                 raise AuditViolation(
                     f"{b}: page id out of range (trash page leaked?)")
-            if len(free) + len(refs) + len(pool.held) != pool.pool_pages:
-                raise AuditViolation(
-                    f"{b}: conservation broken — {len(free)} free + "
-                    f"{len(refs)} referenced + {len(pool.held)} held "
-                    f"!= {pool.pool_pages}")
+            for d in range(pool.shards):
+                nf = sum(1 for pg in free
+                         if self._page_shard(pool, pg) == d)
+                nr = sum(1 for pg in refs
+                         if self._page_shard(pool, pg) == d)
+                nh = self._shard_held(pool, d)
+                if nf + nr + nh != pool.shard_pages:
+                    raise AuditViolation(
+                        f"{b}: shard {d} conservation broken — {nf} free "
+                        f"+ {nr} referenced + {nh} held "
+                        f"!= {pool.shard_pages}")
             if pool.in_use != len(refs):
                 raise AuditViolation(
                     f"{b}: in_use={pool.in_use} != {len(refs)} referenced")
             if commit_check:
-                want = sum(c.get(b, 0) for c in self._commit)
-                if pool.committed != want:
+                for d in range(pool.shards):
+                    want = sum(c.get(b, 0)
+                               for slot, c in enumerate(self._commit)
+                               if self.slot_shard(slot) == d)
+                    if pool.committed_by[d] != want:
+                        raise AuditViolation(
+                            f"{b}: shard {d} committed="
+                            f"{pool.committed_by[d]} != {want} summed "
+                            f"over slot reservations")
+                    if pool.committed_by[d] > pool.shard_pages:
+                        raise AuditViolation(
+                            f"{b}: shard {d} over-committed "
+                            f"{pool.committed_by[d]} of "
+                            f"{pool.shard_pages}")
+                if pool.committed != sum(pool.committed_by):
                     raise AuditViolation(
-                        f"{b}: committed={pool.committed} != {want} "
-                        f"summed over slot reservations")
-                if pool.committed > pool.pool_pages:
-                    raise AuditViolation(
-                        f"{b}: over-committed {pool.committed} of "
-                        f"{pool.pool_pages}")
+                        f"{b}: committed={pool.committed} != per-shard "
+                        f"sum {sum(pool.committed_by)}")
 
     # ------------------------------------------------------------ step ----
 
     def tables(self) -> Dict[str, jnp.ndarray]:
         """Per-step jit argument: the current page tables, device-side
-        (uploaded only after a mapping actually changed)."""
+        (uploaded only after a mapping actually changed).  Sharded
+        pools rewrite unmapped entries (host sentinel 0) to the slot's
+        own shard's trash page, so idle-lane scribbles stay
+        device-local (shard 0's trash *is* page 0)."""
         if self._dev_tables is None:
-            self._dev_tables = {b: jnp.asarray(p.table)
-                                for b, p in self.pools.items()}
+            if self.shards == 1:
+                self._dev_tables = {b: jnp.asarray(p.table)
+                                    for b, p in self.pools.items()}
+            else:
+                self._dev_tables = {}
+                for b, p in self.pools.items():
+                    trash = (self._slot_shard
+                             * (p.shard_pages + 1)).astype(np.int32)
+                    self._dev_tables[b] = jnp.asarray(
+                        np.where(p.table == 0, trash[:, None], p.table))
         return self._dev_tables
 
     def warmup(self) -> None:
@@ -701,8 +842,9 @@ class PagedKVCache:
         reg.gauge("prefix.cached_blocks", lambda: len(self.prefix))
 
     def reserved_kv_bytes(self) -> int:
-        """Bytes actually reserved for KV pages (trash pages included)."""
-        return sum((p.pool_pages + 1) * self.page_len * p.line_bytes
+        """Bytes actually reserved for KV pages (trash pages included —
+        one per shard)."""
+        return sum((p.pool_pages + p.shards) * self.page_len * p.line_bytes
                    for p in self.pools.values())
 
     def contiguous_kv_bytes(self) -> int:
@@ -745,12 +887,14 @@ class PagedKVCache:
                     else 0.0)
         return {
             "page_len": self.page_len,
+            "shards": self.shards,
             "pages_in_use": in_use,
             "pages_peak": sum(p.peak for p in self.pools.values()),
             "pages_total": total,
             "pools": {b: {"pages": p.pool_pages, "in_use": p.in_use,
                           "peak": p.peak, "page_slots": p.page_slots,
-                          "ring": p.ring, "held": len(p.held)}
+                          "ring": p.ring, "held": len(p.held),
+                          "shard_pages": p.shard_pages}
                       for b, p in self.pools.items()},
             "reserved_kv_bytes": reserved,
             "contiguous_kv_bytes": contiguous,

@@ -58,7 +58,8 @@ from repro.core.energy import NUM_MACS, energy_dataflow, tops_per_watt
 from repro.launch.hlo_analysis import roofline
 from repro.launch.hlo_counters import analyze as hlo_analyze
 from repro.models.model import attn_capacity
-from repro.serve.packed import ROUTED_EXPERT, activated_scale
+from repro.serve.packed import (ROUTED_EXPERT, activated_scale,
+                                entry_device_bytes)
 
 __all__ = ["TrafficLedger", "role_of", "TRAFFIC_PHASES", "TRAFFIC_KINDS",
            "CROSSCHECK_BANDS"]
@@ -158,7 +159,11 @@ class TrafficLedger:
         ``PackedModel.stream_report`` sums, grouped by role instead of
         flattened — so the role rows sum *exactly* to the
         ``weight_stream`` aggregates (the dense-baseline walk mirrors
-        ``ServeEngine.weight_stream_report`` the same way)."""
+        ``ServeEngine.weight_stream_report`` the same way).  The
+        ``device_*`` columns apply the same per-entry rule divided by
+        the tensor's shard count (``packed.entry_device_bytes`` —
+        replicated tensors charge whole), so they sum to the engine's
+        ``device_*_bytes_per_step`` aggregates by construction."""
         if self._roles is not None:
             return self._roles
         eng = self.eng
@@ -167,11 +172,19 @@ class TrafficLedger:
                      if cfg.num_experts else None)
         roles: Dict[str, Dict[str, int]] = {}
 
-        def add(role: str, sparse: int, dense: int) -> None:
+        def add(role: str, sparse: int, dense: int,
+                dev_sparse: Optional[int] = None,
+                dev_dense: Optional[int] = None) -> None:
             row = roles.setdefault(
-                role, {"sparse_bytes": 0, "dense_bytes": 0, "tensors": 0})
+                role, {"sparse_bytes": 0, "dense_bytes": 0,
+                       "device_sparse_bytes": 0, "device_dense_bytes": 0,
+                       "tensors": 0})
             row["sparse_bytes"] += sparse
             row["dense_bytes"] += dense
+            row["device_sparse_bytes"] += (
+                sparse if dev_sparse is None else dev_sparse)
+            row["device_dense_bytes"] += (
+                dense if dev_dense is None else dev_dense)
             row["tensors"] += 1
 
         if eng.packed is not None:
@@ -179,7 +192,9 @@ class TrafficLedger:
                 scale = activated_scale(e.experts, activated)
                 add(role_of(e.path),
                     int(round(e.sparse_bytes * scale)),
-                    int(round(e.dense_bytes * scale)))
+                    int(round(e.dense_bytes * scale)),
+                    entry_device_bytes(e, "sparse_bytes", activated),
+                    entry_device_bytes(e, "dense_bytes", activated))
         else:
             for bname, bdict in eng.params["blocks"].items():
                 for comp, tensors in bdict.items():
@@ -197,7 +212,11 @@ class TrafficLedger:
                       * np.dtype(np.float32).itemsize)
         head_sparse = (eng.lm_weight.hbm_bytes
                        if eng.lm_weight is not None else head_dense)
-        add("head", head_sparse, head_dense)
+        head_sh = (eng.lm_weight.shard[1]
+                   if eng.lm_weight is not None
+                   and eng.lm_weight.shard is not None else 1)
+        add("head", head_sparse, head_dense,
+            head_sparse // head_sh, head_dense)
         self._roles = roles
         return roles
 
@@ -461,6 +480,12 @@ class TrafficLedger:
                 "sparse_bytes_per_step": sparse,
                 "dense_bytes_per_step": dense,
                 "reduction": dense / sparse if sparse else 1.0,
+                "shards": (eng.packed.shards
+                           if eng.packed is not None else 1),
+                "device_sparse_bytes_per_step": sum(
+                    r["device_sparse_bytes"] for r in roles.values()),
+                "device_dense_bytes_per_step": sum(
+                    r["device_dense_bytes"] for r in roles.values()),
             },
             "kv": {
                 "line_bytes_per_token": self._line_total,

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -49,6 +49,13 @@ class BitmapWeight:
     shape: Tuple[int, int] = dataclasses.field(metadata=dict(static=True))
     block: Tuple[int, int] = dataclasses.field(metadata=dict(static=True))
     dense_cache: jax.Array | None = None    # (K, N) oracle-path rendering
+    #: sharded layout marker: ``("col"|"row", S)`` when every array leaf
+    #: carries an explicit shard axis (extent S) immediately before its
+    #: tile dims — ``shard_bitmap`` below.  ``shape``/``block`` stay the
+    #: full logical geometry; per-shard tiles are ``block``-sized slices
+    #: of an N- (col) or K- (row) contiguous range.
+    shard: Optional[Tuple[str, int]] = dataclasses.field(
+        default=None, metadata=dict(static=True))
 
     @property
     def budget(self) -> int:
@@ -67,6 +74,10 @@ class BitmapWeight:
         # dims on the arrays while `shape` stays per-matrix — count them
         stacks = math.prod(self.values.shape[:-3]) if self.values.ndim > 3 \
             else 1
+        if self.shard is not None:
+            # the explicit shard axis inflates the leading dims but the
+            # S shards together hold exactly one logical matrix
+            stacks //= self.shard[1]
         return (stacks * self.shape[0] * self.shape[1]
                 * self.values.dtype.itemsize)
 
@@ -233,6 +244,112 @@ def pack_bitmap_experts(w, block: Tuple[int, int],
 def unpack_bitmap_experts(bw: BitmapWeight) -> jax.Array:
     """Dense (P, E, K, N) oracle for an expert-stacked ``BitmapWeight``."""
     return unpack_bitmap_stacked(bw)
+
+
+# --------------------------------------------------------------------------
+# Sharded layout: EIE-style partitioning of the compressed stream.  The N
+# (column-parallel) or K (row-parallel) tile axis is split into S
+# contiguous shard ranges and re-exposed as an explicit shard axis placed
+# immediately before each leaf's tile dims, so a single PartitionSpec axis
+# ('model' at that position) makes every shard's bitmap+values+row_start
+# device-local.  ``shape``/``block`` keep the full logical geometry.
+
+#: trailing per-tile dims of each array leaf (the shard axis sits just
+#: before these; leading stack axes — period P, expert E — come first)
+_TILE_ND = {"packed_bits": 4, "values": 3, "row_start": 3, "dense_cache": 2}
+
+#: offset from ndim of the tile axis being split: col splits the NT axis
+#: (second tile dim — or N itself for dense_cache), row splits KT/K
+_SHARD_OFF = {"col": lambda tile_nd: tile_nd - 1, "row": lambda tile_nd: tile_nd}
+
+
+def _split_leaf(leaf, tile_nd: int, mode: str, shards: int):
+    """Split the sharded tile axis into ``shards`` contiguous ranges and
+    move the new shard axis to just before the tile dims."""
+    if leaf is None:
+        return None
+    nd = leaf.ndim
+    ax = nd - _SHARD_OFF[mode](tile_nd)
+    size = leaf.shape[ax]
+    assert size % shards == 0, (leaf.shape, ax, shards)
+    r = leaf.reshape(leaf.shape[:ax] + (shards, size // shards)
+                     + leaf.shape[ax + 1:])
+    return jnp.moveaxis(r, ax, nd - tile_nd)
+
+
+def _merge_leaf(leaf, tile_nd: int, mode: str):
+    """Inverse of ``_split_leaf``: fold the shard axis back into the tile
+    axis it was split from (shard ranges are contiguous, so this is a
+    pure reshape after the moveaxis)."""
+    if leaf is None:
+        return None
+    n = leaf.ndim
+    j = n - _SHARD_OFF[mode](tile_nd) - 1
+    m = jnp.moveaxis(leaf, n - tile_nd - 1, j)
+    return m.reshape(m.shape[:j] + (m.shape[j] * m.shape[j + 1],)
+                     + m.shape[j + 2:])
+
+
+def shard_bitmap(bw: BitmapWeight, shards: int, mode: str) -> BitmapWeight:
+    """Re-layout a packed ``BitmapWeight`` with an explicit shard axis.
+
+    ``mode="col"`` splits the output-column tile axis (NT) — each shard
+    owns a contiguous N range (wq/wk/wv/w_gate/w_up, vocab-split head);
+    ``mode="row"`` splits the contraction tile axis (KT) — each shard
+    owns a K range and partial products sum (wo/w_down).  Lossless: the
+    per-shard leaves are exact slices of the unsharded pack.
+    """
+    assert mode in ("col", "row"), mode
+    assert bw.shard is None, bw.shard
+    if shards == 1:
+        return bw
+    return dataclasses.replace(
+        bw,
+        packed_bits=_split_leaf(bw.packed_bits, 4, mode, shards),
+        values=_split_leaf(bw.values, 3, mode, shards),
+        row_start=_split_leaf(bw.row_start, 3, mode, shards),
+        dense_cache=_split_leaf(bw.dense_cache, 2, mode, shards),
+        shard=(mode, shards))
+
+
+def unshard_bitmap(bw: BitmapWeight) -> BitmapWeight:
+    """Fold the explicit shard axis back in — the exact unsharded pack."""
+    if bw.shard is None:
+        return bw
+    mode, _ = bw.shard
+    return dataclasses.replace(
+        bw,
+        packed_bits=_merge_leaf(bw.packed_bits, 4, mode),
+        values=_merge_leaf(bw.values, 3, mode),
+        row_start=_merge_leaf(bw.row_start, 3, mode),
+        dense_cache=_merge_leaf(bw.dense_cache, 2, mode),
+        shard=None)
+
+
+def gather_bitmap(bw: BitmapWeight, axis_name: str) -> BitmapWeight:
+    """Inside ``shard_map``: all-gather each device's shard slice over
+    ``axis_name`` and fold the shard axis away, yielding the full
+    unsharded ``BitmapWeight`` (value-identical to the single-device
+    pack, so downstream compute needs no per-shard composition)."""
+    if bw.shard is None:
+        return bw
+    mode, _ = bw.shard
+
+    def g(leaf, tile_nd):
+        if leaf is None:
+            return None
+        ax = leaf.ndim - tile_nd - 1
+        return _merge_leaf(
+            jax.lax.all_gather(leaf, axis_name, axis=ax, tiled=True),
+            tile_nd, mode)
+
+    return dataclasses.replace(
+        bw,
+        packed_bits=g(bw.packed_bits, 4),
+        values=g(bw.values, 3),
+        row_start=g(bw.row_start, 3),
+        dense_cache=g(bw.dense_cache, 2),
+        shard=None)
 
 
 @jax.tree_util.register_dataclass

@@ -1,0 +1,270 @@
+"""Sharded page-pool allocator properties (offline hypothesis shim).
+
+The data-axis sharded ``PagedKVCache`` partitions slots and page-id
+ranges into per-shard groups (each with its own trash page).  Under
+random admit / ensure / retire / prefix-adopt / confiscate / evict
+sequences the allocator must keep, per shard:
+
+* **conservation** — every data page id is in exactly one of
+  {free, referenced, fault-held}, always summing to ``shard_pages``;
+* **no cross-shard aliasing** — a slot only ever maps pages from its
+  own shard's range, prefix blocks stay in the shard that wrote them;
+* **refcount exactness** — ``audit()`` (which checks table mappings +
+  prefix holds against the recorded refcounts) passes at every step.
+
+Plus the end-to-end contracts: chaos faults (page squeeze, forced
+preemption, eviction storm) on a sharded engine decode bit-identically
+to the clean sharded run, and a slot count the data axis doesn't divide
+degrades to a typed ``kv_shard`` fallback — never a crash, and never a
+reason that blames ``model_parallel`` (those fallbacks are retired).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_smoke_config
+from repro.serve import PagedKVCache
+
+TIMEOUT = 600
+
+
+def _per_shard_invariants(kv):
+    """Independent re-derivation of the sharded conservation + aliasing
+    invariants (not just a re-run of ``kv.audit()``)."""
+    for b, pool in kv.pools.items():
+        span = pool.shard_pages + 1          # shard range incl. trash
+        for d in range(pool.shards):
+            ids = set(range(d * span + 1, (d + 1) * span))
+            free_d = {pg for pg in pool.free if pg in ids}
+            ref_d = {pg for pg in pool.ref if pg in ids}
+            held_d = {pg for pg in pool.held if pg in ids}
+            assert not (free_d & ref_d), f"{b}: free and referenced"
+            assert not (free_d & held_d), f"{b}: free and held"
+            assert not (ref_d & held_d), f"{b}: referenced and held"
+            assert free_d | ref_d | held_d == ids, \
+                f"{b}: shard {d} conservation broken"
+        for s in range(kv.num_slots):
+            row = pool.table[s]
+            d = kv.slot_shard(s)
+            for pg in (int(p) for p in row[row != 0]):
+                assert pg // span == d and pg % span != 0, \
+                    f"{b}: slot {s} (shard {d}) maps foreign page {pg}"
+        for e in kv.prefix.values():
+            pg = e.pages[b]
+            assert pg // span == e.shard, \
+                f"{b}: prefix block crossed into shard {pg // span}"
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from([2, 4]),
+       st.lists(st.integers(1, 30), min_size=1, max_size=12),
+       st.integers(8, 64))
+def test_sharded_allocator_invariants_under_random_load(shards, needs,
+                                                        pool_tokens):
+    """Random request sizes and pool budgets against a sharded pool,
+    full admit/ensure/retire lifecycles; admission targets whichever
+    free slot's shard has room (per-shard reserve), like the engine."""
+    cfg = get_smoke_config("gemma3-4b")    # windowed + global blocks
+    kv = PagedKVCache(cfg, num_slots=4, max_len=32, page_len=8,
+                      pool_tokens=pool_tokens, shards=shards)
+    needs = [n for n in needs if kv.possible(n)]
+    active = {}                            # slot -> [next position, need]
+    free_slots = [0, 1, 2, 3]
+    guard = 0
+    while (needs or active) and guard < 600:
+        guard += 1
+        for slot, (pos, need) in list(active.items()):
+            if pos >= need:
+                kv.retire(slot)
+                free_slots.append(slot)
+                del active[slot]
+        while needs and free_slots:
+            need = needs[0]
+            slot = next((s for s in free_slots
+                         if kv.reserve(need, slot=s)), None)
+            if slot is None:               # every free shard is full
+                break
+            needs.pop(0)
+            free_slots.remove(slot)
+            kv.admit(slot, need)
+            active[slot] = [0, need]
+        for slot in list(active):
+            pos, need = active[slot]
+            kv.ensure(slot, pos)
+            active[slot][0] = pos + 1
+        kv.audit()
+        _per_shard_invariants(kv)
+    assert not needs and not active, "sharded allocator stalled"
+    for pool in kv.pools.values():
+        assert pool.in_use == 0 and pool.committed == 0
+        assert pool.committed_by == [0] * pool.shards
+        assert len(pool.free) == pool.pool_pages
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.sampled_from([2, 4]),
+       st.lists(st.tuples(st.integers(0, 3),    # slot
+                          st.integers(0, 2),    # prompt family
+                          st.integers(1, 15),   # suffix length
+                          st.integers(0, 3)),   # chaos action
+               min_size=1, max_size=10))
+def test_sharded_prefix_cow_keeps_shards_disjoint(shards, reqs):
+    """Shard-salted prefix chains: identical prompts admitted into
+    different shards must cache and adopt independently — refcounts
+    exact, no block ever maps a foreign shard's pages — with fault
+    confiscation/restore and targeted eviction interleaved."""
+    cfg = get_smoke_config("olmo-1b")
+    kv = PagedKVCache(cfg, num_slots=4, max_len=32, page_len=8,
+                      shards=shards)
+    for slot, fam, extra, chaos in reqs:
+        tokens = ([fam * 7 + 1 + (j % 5) for j in range(16)]
+                  + [fam + 2 + j for j in range(extra)])[:31]
+        need = len(tokens) + 1
+        if kv._commit[slot]:
+            kv.retire(slot)
+        if not kv.fits(need, slot=slot):   # same-shard peer holds pages
+            for s in range(kv.num_slots):
+                if s != slot and kv._commit[s] \
+                        and kv.slot_shard(s) == kv.slot_shard(slot):
+                    kv.retire(s)
+        if not kv.fits(need, slot=slot):   # fault-held pages squeeze it
+            kv.restore_held()
+        matched, blocks = kv.match_prefix(tokens, slot=slot)
+        if not kv.reserve(need, slot=slot):
+            continue                       # shard genuinely full: queue
+        adopted = kv.admit(slot, need, prefix=blocks)
+        assert adopted == matched
+        kv.ensure_range(slot, adopted, len(tokens))
+        kv.register_prefix(slot, tokens, upto=len(tokens))
+        if chaos == 1:
+            kv.confiscate(1)
+        elif chaos == 2:
+            kv.restore_held()
+        elif chaos == 3:
+            kv.evict_one(shard=kv.slot_shard(slot))
+        kv.audit()
+        _per_shard_invariants(kv)
+    for s in range(kv.num_slots):
+        if kv._commit[s]:
+            kv.retire(s)
+    kv.restore_held()
+    kv.flush_prefix()
+    kv.audit()
+    for pool in kv.pools.values():
+        assert not pool.ref and not pool.held, "pages leaked"
+        span = pool.shard_pages + 1
+        assert sorted(pool.free) == [d * span + pg
+                                     for d in range(pool.shards)
+                                     for pg in range(1, span)]
+
+
+# -------------------- chaos + fallback contract on the sharded engine ------
+
+
+_WORKER = textwrap.dedent("""
+    import json, os, warnings
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    from repro.configs import get_smoke_config
+    from repro.serve import FaultPlan, RequestState, ServeEngine
+
+    PROMPTS = [[1, 2, 3, 4, 5, 6, 7, 8, 9, 10], [4, 5, 6],
+               [1, 2, 3, 4, 5, 6], [9, 8, 7, 6, 5],
+               [1, 2, 3, 4, 5, 6, 7, 8], [2, 4, 6, 8]]
+
+
+    def run(faults=None):
+        cfg = get_smoke_config("olmo-1b")
+        eng = ServeEngine(cfg, num_slots=8, max_len=48, sparsity=0.5,
+                          model_parallel=2, seed=0, paged=True,
+                          page_len=8, prefix_reuse=True, preempt=True,
+                          prefill_chunk=4, audit=True, faults=faults)
+        reqs = [eng.submit(p, 6, arrival=float(i),
+                           temperature=(0.8 if i % 2 else 0.0),
+                           seed=40 + i, top_k=(8 if i % 2 else None))
+                for i, p in enumerate(PROMPTS)]
+        rep = eng.run()
+        eng.kv.flush_prefix()
+        eng.kv.audit()
+        leaks = sum(len(p.ref) + len(p.held)
+                    for p in eng.kv.pools.values())
+        return {
+            "kv_shards": int(eng.kv.shards),
+            "tokens": {str(r.rid): [int(t) for t in r.tokens]
+                       for r in reqs},
+            "states": [r.state is RequestState.DONE and r.error is None
+                       for r in reqs],
+            "fired": int(rep["lifecycle"]["faults"]["fired"]
+                         if faults is not None else 0),
+            "leaks": int(leaks),
+            "fallbacks": {k: str(v) for k, v in rep["fallbacks"].items()},
+        }
+
+
+    plan = (FaultPlan(seed=11).page_squeeze(step=4, pages=6, duration=5)
+            .force_preempt(step=6, count=1).evict_storm(step=9))
+    clean = run()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        chaos = run(faults=plan)
+
+    # indivisible slot count: 5 slots over a 2-extent data axis
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        cfg = get_smoke_config("olmo-1b")
+        eng = ServeEngine(cfg, num_slots=5, max_len=32, sparsity=0.5,
+                          model_parallel=4, seed=0, paged=True,
+                          page_len=8)
+        req = eng.submit([3, 1, 4, 1, 5], 4)
+        rep = eng.run()
+    indiv = {
+        "kv_shards": int(eng.kv.shards),
+        "tokens": [int(t) for t in req.tokens],
+        "fallbacks": {k: str(v) for k, v in rep["fallbacks"].items()},
+    }
+    print(json.dumps({"clean": clean, "chaos": chaos, "indiv": indiv}))
+""")
+
+_CACHE = {}
+
+
+def _worker():
+    if "out" not in _CACHE:
+        env = {**os.environ, "PYTHONPATH": "src"}
+        proc = subprocess.run([sys.executable, "-c", _WORKER],
+                              capture_output=True, text=True,
+                              timeout=TIMEOUT, env=env,
+                              cwd=os.path.dirname(os.path.dirname(
+                                  os.path.abspath(__file__))))
+        assert proc.returncode == 0, \
+            f"sharded chaos worker failed:\n{proc.stderr[-3000:]}"
+        _CACHE["out"] = json.loads(proc.stdout.strip().splitlines()[-1])
+    return _CACHE["out"]
+
+
+def test_chaos_on_sharded_engine_matches_clean_run():
+    out = _worker()
+    clean, chaos = out["clean"], out["chaos"]
+    assert clean["kv_shards"] == 4          # 8 devices / mp=2
+    assert chaos["fired"] >= 3, "not every fault fired"
+    assert chaos["tokens"] == clean["tokens"], \
+        "faulted sharded run diverged from clean sharded run"
+    assert all(chaos["states"]) and all(clean["states"])
+    assert chaos["leaks"] == 0 and clean["leaks"] == 0
+
+
+def test_kv_shard_fallback_is_typed_and_serving_continues():
+    out = _worker()
+    indiv = out["indiv"]
+    assert indiv["kv_shards"] == 1          # degraded, not crashed
+    assert len(indiv["tokens"]) == 4        # still serving
+    assert "kv_shard" in indiv["fallbacks"], indiv["fallbacks"]
+    assert indiv["fallbacks"]["kv_shard"].startswith("shard:")
+    for run in (out["clean"], out["chaos"], indiv):
+        for reason in run["fallbacks"].values():
+            assert "model_parallel" not in reason, reason
